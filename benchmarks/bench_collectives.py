@@ -1,0 +1,69 @@
+"""Wire bytes of the compressed-mean collective vs exact pmean, measured
+from lowered HLO on an 8-device mesh (subprocess: device count is locked at
+first jax init, and benchmarks must see 1 device by default)."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+_INNER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import functools, json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import collectives, types
+from repro.launch import hlo_cost
+
+mesh = jax.make_mesh((8,), ("data",))
+D = 1 << 20
+res = {}
+for mode, frac in (("none", 1.0), ("shared_support", 1/16),
+                   ("gather_decode", 1/16)):
+    cfg = types.CompressionConfig(
+        encoder=types.EncoderSpec(kind="fixed_k", fraction=frac),
+        mode=mode, axes=("data",), min_compress_size=0)
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+                       out_specs=P(), check_vma=False)
+    def f(xs, key):
+        return collectives.compressed_mean(xs.reshape(D), key, cfg)
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((8, D), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    comp = lowered.compile()
+    hc = hlo_cost.analyze_text(comp.as_text())
+    res[mode] = {"wire_bytes": hc.coll_wire_bytes,
+                 "ops": {k: round(v) for k, v in hc.coll_exec.items()}}
+print(json.dumps(res))
+"""
+
+
+def rows():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    t0 = time.perf_counter()
+    proc = subprocess.run([sys.executable, "-c", _INNER], env=env,
+                          capture_output=True, text=True, timeout=600)
+    dt = (time.perf_counter() - t0) * 1e6
+    if proc.returncode != 0:
+        return [{"name": "collectives.wire_bytes", "us_per_call": dt,
+                 "derived": f"FAILED: {proc.stderr[-300:]}", "check": False}]
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    exact = res["none"]["wire_bytes"]
+    shared = res["shared_support"]["wire_bytes"]
+    gather = res["gather_decode"]["wire_bytes"]
+    return [{
+        "name": "collectives.wire_bytes",
+        "us_per_call": dt,
+        "derived": (f"exact={exact:.3e}B shared={shared:.3e}B "
+                    f"(x{exact / max(shared, 1):.1f} less) "
+                    f"gather={gather:.3e}B (x{exact / max(gather, 1):.1f})"),
+        # shared-support at k/d = 1/16 must cut ≥8x vs exact all-reduce
+        "check": shared * 8 < exact,
+    }]

@@ -1,0 +1,52 @@
+"""§1.1 claim: the paper's encoder is O(d); the rotation baseline is
+O(d log d).  Wall-clock per-element time over a d sweep + kernel-path
+throughput (oracle path on CPU; the Pallas kernels are the TPU target)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bernoulli_encode import ops as bern_ops
+from repro.kernels.binary_quant import ops as bq_ops
+from repro.kernels.fixed_k_encode import ops as fk_ops
+from repro.kernels.fixed_k_encode import ref as fk_ref
+from repro.kernels.hadamard import ops as h_ops
+
+
+def _time(fn, reps=20):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn()
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / reps
+
+
+def rows():
+    out = []
+    key = jax.random.PRNGKey(0)
+    for d in (1 << 16, 1 << 20):
+        x = jax.random.normal(key, (d,))
+        t_bern = _time(jax.jit(
+            lambda x=x: bern_ops.bernoulli_encode(x, 1 / 16, 0.0, 7)))
+        nb = fk_ops.num_blocks(d)
+        ids = fk_ref.sample_blocks(key, nb, max(1, nb // 16))
+        t_fk = _time(jax.jit(
+            lambda x=x, ids=ids: fk_ops.fixed_k_encode(x, ids, 0.0)))
+        t_bq = _time(jax.jit(lambda x=x: bq_ops.binary_encode(x, 7)[0]))
+        t_had = _time(jax.jit(lambda x=x: h_ops.fwht(x)))
+        out.append({
+            "name": f"encode_speed.d{d}",
+            "us_per_call": t_bern * 1e6,
+            "derived": (f"bern={t_bern * 1e9 / d:.2f}ns/el "
+                        f"fixed_k={t_fk * 1e9 / d:.2f}ns/el "
+                        f"binary={t_bq * 1e9 / d:.2f}ns/el "
+                        f"hadamard={t_had * 1e9 / d:.2f}ns/el"),
+            "check": t_bern > 0,
+        })
+    # O(d) vs O(d log d): per-element hadamard time should grow with d;
+    # per-element bernoulli time should stay ~flat.
+    return out

@@ -1,0 +1,31 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a check column); exits
+non-zero if any paper-invariant check fails.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_collectives, bench_encode_speed,
+                            bench_quantization, bench_table1, bench_tradeoff)
+    mods = [bench_table1, bench_tradeoff, bench_quantization,
+            bench_encode_speed, bench_collectives]
+    print("name,us_per_call,derived,check")
+    failed = []
+    for m in mods:
+        for r in m.rows():
+            ok = bool(r.get("check", True))
+            print(f"{r['name']},{r['us_per_call']:.1f},\"{r['derived']}\","
+                  f"{'ok' if ok else 'FAIL'}")
+            if not ok:
+                failed.append(r["name"])
+    if failed:
+        print(f"FAILED checks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a small LM with compressed gradient aggregation
+on 8 simulated data-parallel workers, comparing the paper's 1-bit-style
+operating point against exact synchronization.
+
+    python examples/train_lm_compressed.py [--steps 200]
+
+(Device count is locked at first jax init, so this script sets XLA_FLAGS
+itself and must be the process entry point.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ArchConfig, RunConfig, ShapeSpec  # noqa: E402
+from repro.core import types as core_types  # noqa: E402
+from repro.data.pipeline import SyntheticLM  # noqa: E402
+from repro.optim.optimizers import AdamWConfig  # noqa: E402
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: E402
+
+CFG = ArchConfig(name="lm-8m", family="dense", num_layers=4, d_model=256,
+                 num_heads=8, num_kv_heads=4, head_dim=32, d_ff=1024,
+                 vocab_size=2048, tie_embeddings=True)
+SHAPE = ShapeSpec("train", "train", seq_len=128, global_batch=32)
+
+
+def run(steps: int, compression: core_types.CompressionConfig, label: str):
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    run_cfg = RunConfig(microbatches=1, model_parallel=False, seq_shard=False,
+                        attn_chunk_q=128, attn_chunk_k=128, remat=False,
+                        compression=compression)
+    tcfg = TrainerConfig(steps=steps, log_every=max(1, steps // 10),
+                         ckpt_dir=None, seed=0)
+    tr = Trainer(mesh, CFG, run_cfg, SHAPE, tcfg,
+                 AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps))
+    _, _, hist = tr.fit()
+    print(f"\n== {label} ==")
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  "
+              f"gnorm {h['grad_norm']:.3f}  ({h['sec']:.0f}s)")
+    return hist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    exact = run(args.steps, core_types.CompressionConfig(mode="none"),
+                "exact gradient mean (baseline)")
+    comp = core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1 / 16,
+                                       center="mean"),
+        mode="shared_support", axes=("data",), min_compress_size=1024,
+        error_feedback=True)
+    compressed = run(args.steps, comp,
+                     "fixed-k 1/16 + error feedback (1-bit-class wire cost)")
+
+    print(f"\nfinal loss — exact: {exact[-1]['loss']:.4f}   "
+          f"compressed(1/16 + EF): {compressed[-1]['loss']:.4f}")
+    print("wire bytes per step (gradient sync): exact = 2(n-1)/n·|g|·4B; "
+          "compressed ≈ |g|/16·4B + scalars  (×~32 reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, RunConfig, ShapeSpec, SHAPES  # noqa: F401
+from repro.configs.registry import get_config, get_run_config, list_archs, smoke_config  # noqa: F401

@@ -1,0 +1,156 @@
+"""Architecture + shape + run configuration schema.
+
+Every assigned architecture is a frozen :class:`ArchConfig`; the four
+assigned input shapes are :data:`SHAPES`.  ``RunConfig`` carries the
+per-(arch × shape × mesh) tunables the perf loop iterates on
+(microbatches, remat, chunk sizes, compression axes, FSDP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core import types as core_types
+from repro.models.moe import MoECfg
+from repro.models.ssm import SSMCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str              # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None    # default d_model // num_heads
+    qk_norm: bool = False
+    window: Optional[int] = None      # sliding-window attention width
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    attn_every: Optional[int] = None  # hybrid: one attn layer per this many
+    attn_offset: int = 0              # position of attn layer within period
+    encoder_layers: int = 0           # enc-dec only
+    encoder_seq: int = 0              # whisper frame count (stub frontend)
+    num_patches: int = 0              # vlm: patch embeddings prepended (stub)
+    # which shapes this arch supports (long_500k only for sub-quadratic)
+    sub_quadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def vocab_padded(self, tp: int) -> int:
+        return -(-self.vocab_size // tp) * tp
+
+    def supports(self, shape: ShapeSpec) -> bool:
+        if shape.name == "long_500k":
+            return self.sub_quadratic
+        return True
+
+    def param_count(self) -> int:
+        """Approximate total parameters (for roofline MODEL_FLOPS)."""
+        d, l = self.d_model, self.num_layers
+        hd = self.hd
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        dense_mlp = 3 * d * self.d_ff
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        n_attn = l if self.attn_every is None else l // self.attn_every
+        if self.family in ("dense", "vlm"):
+            per_layer = attn + dense_mlp
+            total = l * per_layer
+        elif self.family == "moe":
+            m = self.moe
+            experts = 3 * d * m.d_ff_expert * m.num_experts
+            shared = 3 * d * m.d_ff_shared if m.num_shared else 0
+            total = l * (attn + experts + shared + d * m.num_experts)
+        elif self.family == "ssm":
+            s = self.ssm
+            din = s.d_inner(d)
+            total = l * (2 * d * din + 2 * d * s.d_state + d * s.nheads(d)
+                         + din * d)
+        elif self.family == "hybrid":
+            s = self.ssm
+            m = self.moe
+            din = s.d_inner(d)
+            mamba = 2 * d * din + 2 * d * s.d_state + d * s.nheads(d) + din * d
+            n_moe = l // m.every_n
+            experts = 3 * d * m.d_ff_expert * m.num_experts
+            total = (n_attn * attn + (l - n_attn) * mamba
+                     + n_moe * experts + (l - n_moe) * dense_mlp)
+        elif self.family == "encdec":
+            enc = self.encoder_layers * (attn + 2 * d * self.d_ff)
+            dec = l * (2 * attn + 2 * d * self.d_ff)  # self + cross attn
+            total = enc + dec
+        else:
+            raise ValueError(self.family)
+        return int(total + emb)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed top-k only)."""
+        if self.family not in ("moe", "hybrid"):
+            return self.param_count()
+        d, l = self.d_model, self.num_layers
+        m = self.moe
+        hd = self.hd
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.family == "moe":
+            act_experts = 3 * d * m.d_ff_expert * m.top_k
+            shared = 3 * d * m.d_ff_shared if m.num_shared else 0
+            return int(l * (attn + act_experts + shared + d * m.num_experts) + emb)
+        s = self.ssm
+        din = s.d_inner(d)
+        mamba = 2 * d * din + 2 * d * s.d_state + d * s.nheads(d) + din * d
+        n_attn = l // self.attn_every
+        n_moe = l // m.every_n
+        act = 3 * d * m.d_ff_expert * m.top_k
+        dense_mlp = 3 * d * self.d_ff
+        return int(n_attn * attn + (l - n_attn) * mamba + n_moe * act
+                   + (l - n_moe) * dense_mlp + emb)
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Per-(arch × shape × mesh) execution tunables."""
+    microbatches: int = 1
+    fsdp: bool = False
+    model_parallel: bool = True       # False: fold model axis into batch DP
+    seq_shard: bool = True            # sequence-parallel residual stream
+    attn_chunk_q: int = 1024
+    attn_chunk_k: int = 1024
+    remat: bool = True
+    # §Perf qwen3 iteration 1 (REFUTED): recomputing attention in backward
+    # instead of storing softmax residuals RAISED HBM traffic 10.6->11.6s —
+    # XLA cannot fuse dot->softmax->dot, so scores cross HBM once per sweep
+    # either way and the recompute adds a sweep.  Kept as a knob; the real
+    # fix is the fused Pallas flash kernel (kernels/flash_attention).
+    remat_attention: bool = False
+    # "flash": fused Pallas kernels on TPU (fwd + FA2-style bwd,
+    # kernels/flash_attention); transparently falls back to the XLA
+    # online-softmax path off-TPU.  "xla": force the chunked path.
+    attn_impl: str = "flash"
+    compression: core_types.CompressionConfig = dataclasses.field(
+        default_factory=lambda: core_types.CompressionConfig(mode="none"))
+    compute_dtype: str = "bfloat16"

@@ -1,0 +1,10 @@
+"""llava-next-34b: 60L d7168 56H (kv=8, head_dim=128) ff20480 v64000 — VLM;
+anyres patch frontend STUBBED (input_specs provides patch embeddings,
+num_patches=1152 prepended to the token stream).  56 q-heads pad to 64 for
+TP16 (+14% attn flops, logged).  [hf:llava-hf family; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b", family="vlm", num_layers=60, d_model=7168,
+    num_heads=56, num_kv_heads=8, head_dim=128, d_ff=20480, vocab_size=64000,
+    rope_theta=5e6, num_patches=1152)

@@ -1,0 +1,8 @@
+"""mistral-large-123b: 88L d12288 96H (kv=8, head_dim=128) ff28672 v32768.
+[hf:mistralai/Mistral-Large-Instruct-2407; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b", family="dense", num_layers=88, d_model=12288,
+    num_heads=96, num_kv_heads=8, head_dim=128, d_ff=28672, vocab_size=32768,
+    rope_theta=1e6)

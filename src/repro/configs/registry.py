@@ -1,0 +1,124 @@
+"""Architecture registry + per-(arch, shape) run configurations.
+
+``get_run_config`` holds the production tunables discovered during the
+dry-run / §Perf iterations (microbatches for activation memory, FSDP for
+≥30B params, pure-DP for mamba2-130m, attention chunk sizes per context
+length).  EXPERIMENTS.md records why each override exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.configs import (h2o_danube3_4b, jamba_v01_52b, llava_next_34b,
+                           mamba2_130m, minitron_4b, mistral_large_123b,
+                           olmoe_1b_7b, qwen2_moe_a2_7b, qwen3_4b,
+                           whisper_medium)
+from repro.configs.base import SHAPES, ArchConfig, RunConfig
+from repro.core import types as core_types
+from repro.models.moe import MoECfg
+from repro.models.ssm import SSMCfg
+
+_ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen3_4b, h2o_danube3_4b, minitron_4b, mistral_large_123b,
+              whisper_medium, qwen2_moe_a2_7b, olmoe_1b_7b, mamba2_130m,
+              jamba_v01_52b, llava_next_34b)
+}
+
+
+def list_archs():
+    return sorted(_ARCHS)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {list_archs()}")
+    return _ARCHS[name]
+
+
+# --------------------------------------------------------------------------- #
+# Run configs.
+# --------------------------------------------------------------------------- #
+
+# FSDP set: >8B params — replicated f32 optimizer states would not fit.
+# qwen2-moe joined after the dry-run measured 24 GiB/dev at mb=4 (14.3B
+# total params: 10.5 GiB/dev of master+m+v over model-sharding alone).
+_BIG = {"mistral-large-123b", "jamba-v0.1-52b", "llava-next-34b",
+        "qwen2-moe-a2.7b"}
+
+# default compression for train shapes: the paper's 1-bit operating point
+# (fraction = 1/r = 1/16, Example 7) across the pod axis; exact in-pod.
+_TRAIN_COMPRESSION = core_types.CompressionConfig(
+    encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1.0 / 16,
+                                   center="mean"),
+    mode="shared_support", axes=("pod",))
+
+
+def get_run_config(arch: str, shape: str, *, multi_pod: bool = False,
+                   compression: core_types.CompressionConfig | None = None
+                   ) -> RunConfig:
+    cfg = get_config(arch)
+    kind = SHAPES[shape].kind
+
+    mb = 1
+    if kind == "train":
+        # microbatch counts sized from dry-run memory_analysis (§Dry-run):
+        # qwen3/danube/minitron/qwen2-moe sat at 16.5–25.7 GiB with mb=2.
+        mb = {"mistral-large-123b": 16, "llava-next-34b": 8,
+              "jamba-v0.1-52b": 8, "qwen3-4b": 4, "h2o-danube-3-4b": 4,
+              "minitron-4b": 4, "qwen2-moe-a2.7b": 4, "olmoe-1b-7b": 2,
+              "whisper-medium": 1, "mamba2-130m": 1}.get(arch, 2)
+
+    if compression is None:
+        if kind == "train":
+            axes = ("pod",) if multi_pod else ("data",)
+            compression = dataclasses.replace(_TRAIN_COMPRESSION, axes=axes)
+        else:
+            compression = core_types.CompressionConfig(mode="none")
+
+    chunk_q = chunk_k = 1024
+    if SHAPES[shape].seq_len >= 32768 and kind != "decode":
+        chunk_q, chunk_k = 1024, 2048
+
+    return RunConfig(
+        microbatches=mb,
+        fsdp=cfg.name in _BIG,
+        model_parallel=cfg.name != "mamba2-130m",
+        seq_shard=cfg.name != "mamba2-130m",
+        attn_chunk_q=chunk_q, attn_chunk_k=chunk_k,
+        remat=(kind == "train"),
+        compression=compression)
+
+
+# --------------------------------------------------------------------------- #
+# Reduced smoke variants: same family/topology, tiny dims — one CPU
+# forward/train step per arch (tests/test_models_smoke.py).
+# --------------------------------------------------------------------------- #
+
+def smoke_config(name: str) -> ArchConfig:
+    cfg = get_config(name)
+    kw = dict(
+        name=cfg.name + "-smoke", family=cfg.family,
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+        d_ff=128, vocab_size=512, qk_norm=cfg.qk_norm,
+        window=16 if cfg.window else None, rope_theta=cfg.rope_theta,
+        tie_embeddings=cfg.tie_embeddings, sub_quadratic=cfg.sub_quadratic)
+    if cfg.moe is not None:
+        kw["moe"] = MoECfg(num_experts=4, top_k=2, d_ff_expert=64,
+                           num_shared=(2 if cfg.moe.num_shared else 0),
+                           d_ff_shared=(64 if cfg.moe.num_shared else 0),
+                           every_n=cfg.moe.every_n)
+    if cfg.ssm is not None:
+        kw["ssm"] = SSMCfg(d_state=16, head_dim=16, expand=2,
+                           conv_width=4, chunk=16)
+    if cfg.family == "hybrid":
+        kw["num_layers"] = 4
+        kw["attn_every"] = 4
+        kw["attn_offset"] = 1
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = 2
+        kw["encoder_seq"] = 24
+    if cfg.family == "vlm":
+        kw["num_patches"] = 8
+    return ArchConfig(**kw)

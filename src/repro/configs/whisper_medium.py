@@ -1,0 +1,9 @@
+"""whisper-medium: enc-dec 24+24L d1024 16H (MHA kv=16, head_dim=64) ff4096
+v51865 — conv/mel frontend STUBBED (input_specs provides frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium", family="encdec", num_layers=24, d_model=1024,
+    num_heads=16, num_kv_heads=16, head_dim=64, d_ff=4096, vocab_size=51865,
+    encoder_layers=24, encoder_seq=1500, tie_embeddings=True)

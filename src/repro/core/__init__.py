@@ -1,0 +1,5 @@
+"""Core: the paper's randomized distributed mean estimation protocols."""
+from repro.core.types import (  # noqa: F401
+    CommSpec, CompressionConfig, EncoderSpec, fixed_k_from_fraction)
+from repro.core.protocol import EstimateReport, MeanEstimator, empirical_mse  # noqa: F401
+from repro.core.collectives import compressed_mean, partial_mean  # noqa: F401

@@ -1,0 +1,53 @@
+"""Node-center (mu_i) policies.
+
+The paper associates a scalar *node center* mu_i with each node (§3); the
+encoder transmits deviations from it.  Policies:
+
+* ``zero``    — mu_i = 0; data-independent, so r̄ = 0 bits (§4 footnote 1).
+* ``mean``    — mu_i = (1/d) Σ_j X_i(j); used throughout §5.2.
+* ``min``     — mu_i = min_j X_i(j); the Example 4 / Suresh et al. choice.
+* ``optimal`` — Eq. (16): weighted mean with w_ij = 1/p_ij − 1, optimal for
+  *fixed* probabilities; see :mod:`repro.core.optimal` for the alternating
+  scheme that pairs it with optimal probabilities.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compute_centers(x, policy: str, probs=None):
+    """Return mu with shape x.shape[:-1] (one scalar per node/vector).
+
+    Args:
+      x: (..., d) vectors (leading axes = nodes).
+      policy: one of zero | mean | min | optimal.
+      probs: (..., d) probabilities, required for ``optimal``.
+    """
+    if policy == "zero":
+        return jnp.zeros(x.shape[:-1], x.dtype)
+    if policy == "mean":
+        return jnp.mean(x, axis=-1)
+    if policy == "min":
+        return jnp.min(x, axis=-1)
+    if policy == "optimal":
+        if probs is None:
+            raise ValueError("optimal centers need probabilities (Eq. 16)")
+        return optimal_centers(x, probs)
+    raise ValueError(f"unknown center policy {policy!r}")
+
+
+def optimal_centers(x, probs):
+    """Optimal node centers for fixed probabilities, Eq. (16).
+
+    mu_i = Σ_j w_ij X_i(j) / Σ_j w_ij with w_ij = 1/p_ij − 1.
+
+    Coordinates with p_ij = 1 get zero weight (they are transmitted exactly
+    and do not contribute to the MSE); if *all* coordinates of a node have
+    p = 1 the center is irrelevant and we fall back to the plain mean.
+    """
+    p = jnp.clip(probs, 1e-12, 1.0)
+    w = 1.0 / p - 1.0
+    wsum = jnp.sum(w, axis=-1)
+    mu = jnp.sum(w * x, axis=-1) / jnp.where(wsum > 0, wsum, 1.0)
+    fallback = jnp.mean(x, axis=-1)
+    return jnp.where(wsum > 0, mu, fallback)

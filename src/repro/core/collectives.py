@@ -1,0 +1,188 @@
+"""Compressed mean estimation as a mesh collective (DESIGN.md §2).
+
+These functions run *inside* ``jax.shard_map`` with the compression axes
+manual.  They replace an exact ``pmean`` over those axes by the paper's
+encode → communicate → decode pipeline:
+
+* ``gather_decode``  — faithful star protocol (§2, §4.4): each node encodes
+  independently (Def. 2.1, via fold_in(axis_index)); the compressed wire
+  payloads are all_gathered; every node runs the averaging decoder locally.
+  The §4.4 seed trick is realized for free: peers regenerate each other's
+  support sets from the shared per-step key + peer index, so only values
+  (and the μ_i scalars) hit the wire.
+
+* ``shared_support`` — TPU-native variant: one support set for all nodes
+  (shared seed), so the averaged wire values can ride a plain psum of a
+  length-k buffer (ring-bandwidth optimal).  MSE closed form:
+  :func:`repro.core.mse.mse_fixed_k_shared`.
+
+* ``dense_sim``      — encode per node, exact pmean of the dense encoded
+  vectors: bit-identical estimates to gather_decode with no wire savings;
+  supports every encoder (incl. variable-size support and binary) and is
+  used for correctness tests and MSE studies under shard_map.
+
+All functions take and return a single flat f32 vector; pytree plumbing
+lives in repro.train (grad flattening / chunking / per-leaf policies).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoders
+from repro.core import types as t
+from repro.kernels.fixed_k_encode import ops as fk
+
+Axes = Tuple[str, ...]
+
+
+def _axis_rank_size(axes: Axes):
+    """Linear rank of this shard within the compression axes + node count."""
+    rank = jnp.zeros((), jnp.int32)
+    n = 1
+    for ax in axes:
+        rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        n *= jax.lax.axis_size(ax)
+    return rank, n
+
+
+def _center(x, policy: str):
+    if policy == "zero":
+        return jnp.zeros((), jnp.float32)
+    if policy == "mean":
+        return jnp.mean(x).astype(jnp.float32)
+    if policy == "min":
+        return jnp.min(x).astype(jnp.float32)
+    raise ValueError(f"center policy {policy!r} not supported in collectives "
+                     "(optimal centers need the §6 solver — reference path only)")
+
+
+# --------------------------------------------------------------------------- #
+# fixed-k (block-structured) compressed mean — the production encoder.
+# --------------------------------------------------------------------------- #
+
+def _fixed_k_wire(x, key, cfg: t.CompressionConfig, shared: bool):
+    """Encode the local vector: (values (kb, BLOCK), mu, block_ids)."""
+    d = x.size
+    nb = fk.num_blocks(d)
+    kb = max(1, min(nb, int(round(cfg.encoder.fraction * nb))))
+    if shared:
+        ksup = key  # same subset on every node
+    else:
+        rank, _ = _axis_rank_size(cfg.axes)
+        ksup = jax.random.fold_in(key, rank)
+    ids = fk.sample_blocks(ksup, nb, kb)
+    mu = _center(x, cfg.encoder.center)
+    vals = fk.fixed_k_encode(x, ids, mu)
+    return vals.astype(cfg.wire_dtype), mu, ids
+
+
+def fixed_k_mean_shared(x, key, cfg: t.CompressionConfig):
+    """shared_support mode: psum(k wire values) + psum(μ) + scatter-decode.
+
+    Collective traffic: kb·BLOCK wire-dtype elements + 1 scalar — versus d
+    full-precision elements for exact pmean.
+    """
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    vals, mu, ids = _fixed_k_wire(flat, key, cfg, shared=True)
+    # the psum runs at the wire dtype (r = 16 bits/coordinate, matching the
+    # paper's r and the bf16-native TPU all-reduce)
+    vals = jax.lax.pmean(vals, cfg.axes).astype(jnp.float32)
+    mu = jax.lax.pmean(mu, cfg.axes)
+    y = fk.fixed_k_decode(vals, ids, mu, shape)
+    return y.astype(dtype)
+
+
+def fixed_k_mean_gather(x, key, cfg: t.CompressionConfig):
+    """gather_decode mode: independent supports, all_gather values + μ.
+
+    Wire per node: n·(kb·BLOCK) wire-dtype elements + n scalars (receives),
+    kb·BLOCK sends — the star protocol §4.4 with implicit seeds.  Decode
+    regenerates every peer's support locally and averages the dense
+    reconstructions:  Y = mean_i μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
+    """
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    d = flat.size
+    nb = fk.num_blocks(d)
+    kb = max(1, min(nb, int(round(cfg.encoder.fraction * nb))))
+    rank, n = _axis_rank_size(cfg.axes)
+    my_ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
+    mu = _center(flat, cfg.encoder.center)
+    vals = fk.fixed_k_encode(flat, my_ids, mu).astype(cfg.wire_dtype)
+
+    # ---- the wire: values + centers only (supports regenerate from seed).
+    all_vals = _gather_nested(vals, cfg.axes)        # (n, kb, BLOCK)
+    all_mu = _gather_nested(mu, cfg.axes)            # (n,)
+    all_vals = all_vals.reshape(n, kb, fk.BLOCK).astype(jnp.float32)
+    all_mu = all_mu.reshape(n)
+
+    # ---- decode: Y = mean μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
+    def body(i, acc):
+        ids_i = fk.sample_blocks(jax.random.fold_in(key, i), nb, kb)
+        return acc.at[ids_i].add(all_vals[i])
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((nb, fk.BLOCK), jnp.float32))
+    y = (acc / n + jnp.mean(all_mu)).reshape(-1)[:d]
+    return y.reshape(shape).astype(dtype)
+
+
+def _gather_nested(v, axes: Axes):
+    """all_gather over possibly-multiple axes, flattening the node dim."""
+    out = v[None]
+    for ax in reversed(axes):
+        out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# dense simulation (any encoder) + dispatch.
+# --------------------------------------------------------------------------- #
+
+def dense_sim_mean(x, key, cfg: t.CompressionConfig):
+    """Encode locally (independent), exact pmean of dense encodings.
+
+    Estimate-distribution-identical to gather_decode; used to exercise the
+    bernoulli / binary / ternary encoders under shard_map.
+    """
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    rank, _ = _axis_rank_size(cfg.axes)
+    kenc = jax.random.fold_in(key, rank)
+    encd = encoders.encode(kenc, flat, cfg.encoder)
+    y = jax.lax.pmean(encd.y.astype(jnp.float32), cfg.axes)
+    return y.reshape(shape).astype(dtype)
+
+
+def compressed_mean(x, key, cfg: t.CompressionConfig):
+    """Estimate mean(x) over cfg.axes under the configured protocol.
+
+    Must be called inside shard_map with cfg.axes manual.  Unbiased:
+    E[result] = pmean(x, cfg.axes) for every mode (Lemmas 3.1/3.3).
+    """
+    if cfg.mode == "none" or x.size < cfg.min_compress_size:
+        return jax.lax.pmean(x, cfg.axes)
+    if cfg.mode == "shared_support":
+        return fixed_k_mean_shared(x, key, cfg)
+    if cfg.mode == "gather_decode":
+        if cfg.encoder.kind != "fixed_k":
+            return dense_sim_mean(x, key, cfg)  # §4.3 var-support: see module doc
+        return fixed_k_mean_gather(x, key, cfg)
+    if cfg.mode == "dense_sim":
+        return dense_sim_mean(x, key, cfg)
+    raise ValueError(cfg.mode)
+
+
+def partial_mean(x, alive, axes: Axes):
+    """Straggler-tolerant exact mean over the live nodes only.
+
+    ``alive``: local 0/1 scalar.  Unbiased for the survivors' mean — the
+    averaging decoder is n-agnostic (DESIGN.md §5).
+    """
+    num = jax.lax.psum(x * alive, axes)
+    den = jnp.maximum(jax.lax.psum(alive, axes), 1.0)
+    return num / den

@@ -1,0 +1,106 @@
+"""Communication-cost models beta (§4).
+
+Two views are provided:
+
+* *analytic* expected costs ``C_{alpha,beta}`` as closed forms in the
+  protocol parameters (Eqs. in §4.1–§4.5) — these are the quantities the
+  paper's Table 1 tabulates; and
+* *realized* costs ``measure_bits`` computed from an actual
+  :class:`repro.core.encoders.Encoded` sample (the random variable
+  Σ_i beta(alpha(X_i)) whose expectation the analytic forms give).
+
+All costs are in **bits** for the full n-node round.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.core.types import CommSpec
+
+
+def ceil_log2(d: int) -> int:
+    return max(1, math.ceil(math.log2(d)))
+
+
+# --- analytic expected costs (§4) ---------------------------------------- #
+
+def cost_naive(n: int, d: int, spec: CommSpec) -> float:
+    """§4.1:  C = n·d·r."""
+    return float(n * d * spec.r_bits)
+
+
+def cost_varying_length(probs, spec: CommSpec) -> float:
+    """§4.2:  C = n·r̄ + Σ_ij (1 + r·p_ij).   probs: (n, d)."""
+    n = probs.shape[0]
+    return float(n * spec.rbar_bits + jnp.sum(1.0 + spec.r_bits * probs))
+
+
+def cost_sparse(probs, spec: CommSpec, d: int) -> float:
+    """§4.3 Eq. (8):  C = n·r̄ + (⌈log d⌉ + r)·Σ_ij p_ij."""
+    n = probs.shape[0]
+    return float(n * spec.rbar_bits
+                 + (ceil_log2(d) + spec.r_bits) * jnp.sum(probs))
+
+
+def cost_sparse_seed_fixed_k(n: int, k: int, spec: CommSpec) -> float:
+    """§4.4 Eq. (9) (fixed-size support):  C = n(r̄ + r̄_s) + n·k·r.
+
+    Deterministic — the straggler-friendly protocol.
+    """
+    return float(n * (spec.rbar_bits + spec.rseed_bits) + n * k * spec.r_bits)
+
+
+def cost_sparse_seed_uniform_p(n: int, d: int, p: float, spec: CommSpec) -> float:
+    """§4.4 Eq. (10) (uniform-p variable support):  C = n(r̄ + r̄_s) + n·d·p·r."""
+    return float(n * (spec.rbar_bits + spec.rseed_bits) + n * d * p * spec.r_bits)
+
+
+def cost_binary(n: int, d: int, spec: CommSpec) -> float:
+    """§4.5 Eq. (11):  C = 2·n·r + n·d   (two scalars + 1 bit/coordinate)."""
+    return float(n * 2 * spec.r_bits + n * d)
+
+
+def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None) -> float:
+    """Dispatch on ``spec.protocol``; see the per-protocol functions."""
+    if spec.protocol == "naive":
+        return cost_naive(n, d, spec)
+    if spec.protocol == "varying":
+        assert probs is not None
+        return cost_varying_length(probs, spec)
+    if spec.protocol == "sparse":
+        assert probs is not None
+        return cost_sparse(probs, spec, d)
+    if spec.protocol == "sparse_seed":
+        if k is not None:
+            return cost_sparse_seed_fixed_k(n, k, spec)
+        assert p is not None
+        return cost_sparse_seed_uniform_p(n, d, p, spec)
+    if spec.protocol == "binary":
+        return cost_binary(n, d, spec)
+    raise ValueError(spec.protocol)
+
+
+# --- realized cost of one encoded round ----------------------------------- #
+
+def measure_bits(encoded, spec: CommSpec, d: int) -> float:
+    """Bits actually used by one sampled round under protocol ``spec``.
+
+    ``encoded`` is a batched :class:`Encoded` (leading node axis).  The
+    expectation of this quantity over encoder randomness equals the analytic
+    ``cost`` (verified by tests/test_comm_cost.py).
+    """
+    n = encoded.y.shape[0]
+    nsent = jnp.sum(encoded.nsent)
+    if spec.protocol == "naive":
+        return float(n * d * spec.r_bits)
+    if spec.protocol == "varying":
+        return float(n * spec.rbar_bits + n * d + spec.r_bits * nsent)
+    if spec.protocol == "sparse":
+        return float(n * spec.rbar_bits + (ceil_log2(d) + spec.r_bits) * nsent)
+    if spec.protocol == "sparse_seed":
+        return float(n * (spec.rbar_bits + spec.rseed_bits) + spec.r_bits * nsent)
+    if spec.protocol == "binary":
+        return float(n * 2 * spec.r_bits + n * d)
+    raise ValueError(spec.protocol)

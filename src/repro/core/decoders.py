@@ -1,0 +1,26 @@
+"""Decoding protocols gamma (§2).
+
+The paper's analysis centres on the *averaging decoder* (Example 2); the
+rotation pre-processing of §7.2 composes it with the inverse rotation
+(Example 3 shows any invertible linear map gives an exact scheme when used
+losslessly).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def averaging_decoder(ys):
+    """gamma(Y_1..Y_n) = (1/n) Σ Y_i  (Example 2).  ys: (n, d) -> (d,)."""
+    return jnp.mean(ys, axis=0)
+
+
+def weighted_partial_decoder(ys, alive):
+    """Straggler-tolerant decode: average over the live subset only.
+
+    Unbiased for the mean of the *live* nodes' vectors (the averaging
+    decoder is n-agnostic — DESIGN.md §5).  ``alive``: (n,) bool/0-1 mask.
+    """
+    w = alive.astype(ys.dtype)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.einsum("n,nd->d", w, ys) / denom

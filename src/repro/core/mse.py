@@ -1,0 +1,130 @@
+"""Closed-form MSE of the encoding protocols (Lemmas 3.2, 3.4, 7.2; Thm 6.1).
+
+These are the paper's exact expressions; tests validate the *empirical*
+mean-squared error of the encoders in :mod:`repro.core.encoders` against
+them, which is the strongest faithfulness check available (the formulas are
+the paper's central quantitative claims).
+
+Conventions: X is (n, d); probs broadcastable to (n, d); mus (n,).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def r_factor(xs, mus):
+    """R = (1/n) Σ_i ||X_i − μ_i·1||²  (§5.2 / Thm 6.1)."""
+    dev = xs - mus[:, None]
+    return jnp.mean(jnp.sum(dev * dev, axis=-1))
+
+
+def mse_bernoulli(xs, probs, mus):
+    """Lemma 3.2:  MSE = (1/n²) Σ_ij (1/p_ij − 1)(X_i(j) − μ_i)².
+
+    p_ij = 0 contributes 0 iff X_i(j) = μ_i (Remark 1 semantics); we honour
+    that by zeroing those terms (the optimal solutions of §6.1 only assign
+    p = 0 there).
+    """
+    n = xs.shape[0]
+    probs = jnp.broadcast_to(jnp.asarray(probs, xs.dtype), xs.shape)
+    dev2 = (xs - mus[:, None]) ** 2
+    psafe = jnp.where(probs > 0, probs, 1.0)
+    terms = jnp.where(probs > 0, (1.0 / psafe - 1.0) * dev2, jnp.where(dev2 > 0, jnp.inf, 0.0))
+    return jnp.sum(terms) / n**2
+
+
+def mse_fixed_k(xs, k, mus):
+    """Lemma 3.4:  MSE = (1/n²) Σ_ij ((d−k)/k)(X_i(j) − μ_i)²."""
+    n, d = xs.shape
+    dev2 = (xs - mus[:, None]) ** 2
+    return (d - k) / k * jnp.sum(dev2) / n**2
+
+
+def mse_fixed_k_shared(xs, k, mus):
+    """Shared-support fixed-k MSE (our TPU-native variant, DESIGN.md §2).
+
+    When all nodes draw the *same* support D (|D| = k uniform), the errors
+    couple coherently through the common indicator:
+
+      Y(j) − X(j) = (1_{j∈D}·d/k − 1) · (1/n) Σ_i (X_i(j) − μ_i),
+
+    so  MSE = ((d−k)/k) · Σ_j ( (1/n) Σ_i (X_i(j) − μ_i) )²   — *exact*:
+    ||Y−X||² is a sum of per-coordinate squares, so only the second moment
+    E[(1_{j∈D}·d/k − 1)²] = (k/d)(d/k−1)² + (1−k/d) = (d−k)/k enters; no
+    cross-coordinate terms arise.
+
+    Compare Lemma 3.4 (independent supports): the independent MSE averages
+    per-node deviations *incoherently* ((1/n²)Σ_i Σ_j dev²), while the
+    shared one squares the *coherent* node-mean deviation.  For i.i.d.
+    gradient-noise-like deviations both are Θ((d/k−1)·R/n); when node
+    deviations anti-correlate the shared variant wins.
+    """
+    d = xs.shape[1]
+    mean_dev = jnp.mean(xs - mus[:, None], axis=0)  # (d,)
+    return (d - k) / k * jnp.sum(mean_dev**2)
+
+
+def mse_binary(xs):
+    """Example 4 exact MSE:  (1/n²) Σ_ij (X^max_i − X_i(j))(X_i(j) − X^min_i)."""
+    n = xs.shape[0]
+    vmin = jnp.min(xs, axis=-1, keepdims=True)
+    vmax = jnp.max(xs, axis=-1, keepdims=True)
+    return jnp.sum((vmax - xs) * (xs - vmin)) / n**2
+
+
+def mse_binary_bound(xs):
+    """Example 4 / [10, Thm 1] bound:  d/(2n) · (1/n) Σ_i ||X_i||²."""
+    n, d = xs.shape
+    return d / (2 * n) * jnp.mean(jnp.sum(xs * xs, axis=-1))
+
+
+def mse_ternary(xs, p1, p2, c1s, c2s):
+    """Exact MSE of the ternary encoder Eq. (21)  (corrected Lemma 7.2).
+
+    Per coordinate:  E[(Y−X)²] = p'(X−c1)² + p''(X−c2)²
+                                 + (p'(X−c1) + p''(X−c2))² / (1−p'−p'').
+
+    Note: Lemma 7.2 *as printed* states the third term as (p'c1 + p''c2)²,
+    which fails the sanity check X = c1, p'' = 0 (a lossless configuration
+    must have zero error, but the printed form gives (p'c1)² ≠ 0).  The
+    paper omits the proof ("for brevity"); we derive, implement and
+    empirically verify the corrected form above (see
+    tests/test_mse_theory.py::test_ternary_matches_empirical).
+    """
+    n = xs.shape[0]
+    p1 = jnp.broadcast_to(jnp.asarray(p1, xs.dtype), xs.shape)
+    p2 = jnp.broadcast_to(jnp.asarray(p2, xs.dtype), xs.shape)
+    d1 = xs - c1s[:, None]
+    d2 = xs - c2s[:, None]
+    rest = 1.0 - p1 - p2
+    restsafe = jnp.where(rest > 0, rest, 1.0)
+    terms = p1 * d1**2 + p2 * d2**2 + (p1 * d1 + p2 * d2) ** 2 / restsafe
+    return jnp.sum(terms) / n**2
+
+
+# --- Theorem 6.1 --------------------------------------------------------- #
+
+def thm61_bounds(xs, mus, B):
+    """MSE bounds of the optimal protocol under budget B (Thm 6.1, Eq. 19).
+
+    Returns (lower, upper):  (1/B − 1)·R/n  ≤  MSE*  ≤  (|S|/B − 1)·R/n,
+    with S = {(i,j): X_i(j) ≠ μ_i}.
+    """
+    n = xs.shape[0]
+    R = r_factor(xs, mus)
+    S = jnp.sum((xs - mus[:, None]) != 0)
+    lower = (1.0 / B - 1.0) * R / n
+    upper = (S / B - 1.0) * R / n
+    return lower, upper
+
+
+def thm61_exact_low_budget(xs, mus, B):
+    """Eq. (20): exact optimal MSE when B ≤ Σ a_ij / max a_ij.
+
+    MSE* = W²/(n²B) − R/n  with  a_ij = |X_i(j) − μ_i|, W = Σ a_ij.
+    """
+    n = xs.shape[0]
+    a = jnp.abs(xs - mus[:, None])
+    W = jnp.sum(a)
+    R = r_factor(xs, mus)
+    return W**2 / (n**2 * B) - R / n

@@ -1,0 +1,155 @@
+"""Reference single-host implementation of the full (alpha, beta, gamma) stack.
+
+:class:`MeanEstimator` bundles an encoder spec, a communication-cost model
+and the averaging decoder, exposing exactly the quantities the paper
+analyses: an unbiased estimate Y of X = mean(X_i), its realized/expected
+communication cost in bits, and its empirical/closed-form MSE.  This is the
+oracle the distributed collectives (repro.core.collectives) and the
+benchmarks are validated against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import centers as centers_lib
+from repro.core import comm_cost, decoders, encoders
+from repro.core import mse as mse_lib
+from repro.core import optimal as optimal_lib
+from repro.core import rotation as rotation_lib
+from repro.core import types as t
+
+
+@dataclasses.dataclass
+class EstimateReport:
+    estimate: jax.Array          # (d,) the decoded Y
+    bits: float                  # realized communication cost (this round)
+    expected_bits: float         # analytic C_{alpha,beta}
+    expected_mse: float          # closed-form MSE at the given X (not rotated)
+    nsent_total: int             # Σ_i |S_i|
+
+
+class MeanEstimator:
+    """(alpha, beta, gamma) with alpha from §3, beta from §4, gamma = averaging."""
+
+    def __init__(self, enc: t.EncoderSpec = t.EncoderSpec(),
+                 comm: t.CommSpec = t.CommSpec(), budget: Optional[float] = None):
+        """``budget`` (B of §6) activates optimal probabilities when
+        enc.probs == "optimal"; it bounds Σ_ij p_ij."""
+        self.enc = enc
+        self.comm = comm
+        self.budget = budget
+        if enc.probs == "optimal" and comm.protocol == "sparse_seed":
+            # §4.4: the seed trick needs identically-distributed supports
+            # (fixed k or uniform p); per-coordinate optimal probabilities
+            # require transmitting indices (§4.3).
+            raise ValueError("optimal probabilities require the 'sparse' "
+                             "communication protocol (§4.3), not sparse_seed")
+
+    # -- parameter selection (§6) ---------------------------------------- #
+    def parameters_for(self, xs):
+        """Return (probs or None, mus) per the spec's policies."""
+        n, d = xs.shape
+        if self.enc.kind in ("identity", "binary"):
+            return None, None
+        if self.enc.probs == "optimal":
+            B = self.budget if self.budget is not None else self.enc.fraction * n * d
+            if self.enc.center == "optimal":
+                probs, mus, _ = optimal_lib.alternating_minimization(xs, B)
+            else:
+                mus = centers_lib.compute_centers(xs, self.enc.center)
+                probs = optimal_lib.optimal_probs(xs, mus, B)
+            return probs, mus
+        mus = centers_lib.compute_centers(
+            xs, self.enc.center if self.enc.center != "optimal" else "mean")
+        if self.enc.center == "optimal":
+            p0 = jnp.full(xs.shape, self.enc.fraction, xs.dtype)
+            mus = centers_lib.optimal_centers(xs, p0)
+        return None, mus
+
+    # -- one estimation round --------------------------------------------- #
+    def estimate(self, key, xs) -> EstimateReport:
+        """Run encode → (bit-accounted) communicate → decode on (n, d) xs."""
+        n, d = xs.shape
+        kq, kenc = jax.random.split(key)
+        work = xs
+        if self.enc.rotation:
+            work = rotation_lib.rotate(kq, xs)  # shared Q across nodes (§7.2)
+        probs, mus = self.parameters_for(work)
+        encd = encoders.encode_batch(kenc, work, self.enc, probs=probs, mus=mus)
+        y = decoders.averaging_decoder(encd.y)
+        if self.enc.rotation:
+            y = rotation_lib.unrotate(kq, y, d)
+        bits = comm_cost.measure_bits(encd, self.comm, work.shape[1])
+        return EstimateReport(
+            estimate=y,
+            bits=bits,
+            expected_bits=self.expected_bits(work, probs),
+            expected_mse=float(self.expected_mse(work, probs, mus)),
+            nsent_total=int(jnp.sum(encd.nsent)),
+        )
+
+    def expected_bits(self, xs, probs=None) -> float:
+        n, d = xs.shape
+        if self.enc.kind == "identity":
+            return comm_cost.cost_naive(n, d, self.comm)
+        if self.enc.kind == "binary":
+            return comm_cost.cost_binary(n, d, self.comm)
+        if self.enc.kind == "fixed_k":
+            k = t.fixed_k_from_fraction(d, self.enc.fraction)
+            return comm_cost.cost(self.comm, n=n, d=d, k=k)
+        if probs is None:
+            probs = jnp.full(xs.shape, self.enc.fraction, xs.dtype)
+        return comm_cost.cost(self.comm, n=n, d=d, probs=probs,
+                              p=float(self.enc.fraction))
+
+    def expected_mse(self, xs, probs=None, mus=None):
+        n, d = xs.shape
+        if self.enc.kind == "identity":
+            return jnp.zeros(())
+        if self.enc.kind == "binary":
+            return mse_lib.mse_binary(xs)
+        if mus is None:
+            _, mus = self.parameters_for(xs)
+        if self.enc.kind == "fixed_k":
+            k = t.fixed_k_from_fraction(d, self.enc.fraction)
+            return mse_lib.mse_fixed_k(xs, k, mus)
+        if probs is None:
+            probs = jnp.full(xs.shape, self.enc.fraction, xs.dtype)
+        if self.enc.kind == "bernoulli":
+            return mse_lib.mse_bernoulli(xs, probs, mus)
+        if self.enc.kind == "ternary":
+            c1 = jnp.min(xs, axis=-1)
+            c2 = jnp.max(xs, axis=-1)
+            half = (1.0 - self.enc.fraction) / 2.0
+            return mse_lib.mse_ternary(xs, half, half, c1, c2)
+        raise ValueError(self.enc.kind)
+
+
+def empirical_mse(key, xs, estimator: MeanEstimator, trials: int = 256):
+    """Monte-Carlo MSE of the estimator — the Def. 2.2 expectation.
+
+    Traced (jit-compatible) re-implementation of one estimate() round,
+    without the Python-float bit accounting.
+    """
+    n, d = xs.shape
+    x_true = jnp.mean(xs, axis=0)
+
+    def one(k):
+        kq, kenc = jax.random.split(k)
+        work = rotation_lib.rotate(kq, xs) if estimator.enc.rotation else xs
+        probs, mus = estimator.parameters_for(work)
+        encd = encoders.encode_batch(kenc, work, estimator.enc,
+                                     probs=probs, mus=mus)
+        y = decoders.averaging_decoder(encd.y)
+        if estimator.enc.rotation:
+            y = rotation_lib.unrotate(kq, y, d)
+        err = y - x_true
+        return jnp.sum(err * err)
+
+    keys = jax.random.split(key, trials)
+    errs = jax.lax.map(jax.jit(one), keys)
+    return jnp.mean(errs)

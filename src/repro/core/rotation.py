@@ -1,0 +1,49 @@
+"""Random-rotation pre-processing (§7.2 / Remark 3, after Suresh et al. [10]).
+
+Q = (1/√d)·H·D with H the Walsh–Hadamard matrix and D = diag(±1) random.
+Q is orthogonal (QQᵀ = I), identified by a single seed (the paper's point:
+negligible communication overhead), and computable in O(d log d).
+
+The FWHT itself lives in :mod:`repro.kernels.hadamard` (Pallas kernel with
+pure-jnp oracle); this module provides the seeded rotate / unrotate pair
+used by encoders and composes the Example-3 linear encoder/decoder.
+Non-power-of-two d is handled by zero-padding to the next power of two
+(standard practice; the decoder truncates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hadamard import ops as hadamard_ops
+
+
+def _pad_pow2(x):
+    d = x.shape[-1]
+    dp = 1 << max(0, (d - 1).bit_length())
+    if dp == d:
+        return x, d
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, dp - d)]
+    return jnp.pad(x, pad), d
+
+
+def rademacher_diag(key, d: int, dtype=jnp.float32):
+    """The D of Q = (1/√d)HD: iid ±1 signs from a shared seed."""
+    return jax.random.rademacher(key, (d,), dtype=dtype)
+
+
+def rotate(key, x):
+    """z = Qx.  x: (..., d) -> (..., d_pow2)."""
+    xp, _ = _pad_pow2(x)
+    dp = xp.shape[-1]
+    signs = rademacher_diag(key, dp, xp.dtype)
+    z = hadamard_ops.fwht(xp * signs) / jnp.sqrt(jnp.asarray(dp, xp.dtype))
+    return z
+
+
+def unrotate(key, z, d: int):
+    """x = Q⁻¹z = Qᵀz = (1/√d)·D·H·z, truncated back to the original d."""
+    dp = z.shape[-1]
+    signs = rademacher_diag(key, dp, z.dtype)
+    x = signs * hadamard_ops.fwht(z) / jnp.sqrt(jnp.asarray(dp, z.dtype))
+    return x[..., :d]

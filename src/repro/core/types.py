@@ -1,0 +1,139 @@
+"""Configuration types for the randomized distributed mean estimation core.
+
+The vocabulary follows the paper (Konečný & Richtárik, 2016):
+
+* *encoder* ``alpha``  — the randomized lossy transform applied per node (§3).
+* *communication protocol* ``beta`` — the bit-level wire format (§4).
+* *decoder* ``gamma`` — the server-side estimate; always averaging here (§2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Number of bits for one floating point value on the wire ("r" in the paper).
+# bf16 is the TPU-native wire dtype; the paper's plots use r=16 as well.
+DEFAULT_R_BITS = 16
+# Bits to send one node center mu_i ("r bar").
+DEFAULT_RBAR_BITS = 16
+# Bits for a random seed identifying a sampled support set ("r bar_s", §4.4).
+DEFAULT_RSEED_BITS = 32
+
+ENCODERS = ("identity", "bernoulli", "fixed_k", "binary", "ternary")
+CENTERS = ("zero", "mean", "min", "optimal")
+PROBS = ("uniform", "optimal")
+MODES = ("none", "gather_decode", "shared_support", "dense_sim")
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderSpec:
+    """Parameters of the encoding protocol alpha (§3).
+
+    Attributes:
+      kind: which member of the family.
+        * ``identity``  — Example 1 (lossless).
+        * ``bernoulli`` — variable-size-support protocol, Eq. (1).
+        * ``fixed_k``   — fixed-size-support protocol, Eq. (4).
+        * ``binary``    — Example 4 (recovers Suresh et al. [10]).
+        * ``ternary``   — the k-ary (k=3) extension, Eq. (21).
+      fraction: expected fraction of coordinates sent.  For ``bernoulli``
+        with uniform probs this is ``p``; for ``fixed_k`` it is ``k/d``
+        (``k = max(1, round(fraction*d))``).  Ignored by ``identity`` and
+        ``binary``.
+      probs: ``uniform`` (p_ij = p for all i, j) or ``optimal``
+        (water-filled p_ij ∝ |X_i(j) − μ_i|, §6.1).
+      center: node-center policy for μ_i — ``zero`` (data-independent,
+        r̄ = 0), ``mean`` (per-node coordinate average, §5.2), ``min``
+        (used by Example 4), or ``optimal`` (Eq. (16) /
+        alternating minimization, §6).
+      rotation: apply the randomized Hadamard pre-rotation (§7.2) before
+        encoding and undo it after decoding.
+    """
+
+    kind: str = "fixed_k"
+    fraction: float = 1.0 / DEFAULT_R_BITS  # paper's 1-bit point: p = 1/r
+    probs: str = "uniform"
+    center: str = "mean"
+    rotation: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ENCODERS:
+            raise ValueError(f"unknown encoder kind {self.kind!r}; want one of {ENCODERS}")
+        if self.probs not in PROBS:
+            raise ValueError(f"unknown probs policy {self.probs!r}")
+        if self.center not in CENTERS:
+            raise ValueError(f"unknown center policy {self.center!r}")
+        if not (0.0 < self.fraction <= 1.0):
+            raise ValueError(f"fraction must be in (0, 1], got {self.fraction}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Parameters of the communication protocol beta (§4).
+
+    ``protocol`` selects the bit-cost model:
+      * ``naive``         — d full floats per node (§4.1).
+      * ``varying``       — 1 flag bit per coordinate + r bits when sent (§4.2).
+      * ``sparse``        — (⌈log2 d⌉ + r) bits per sent coordinate (§4.3).
+      * ``sparse_seed``   — r bits per sent coordinate + seed (§4.4; only for
+                            fixed_k or uniform-p encoders).
+      * ``binary``        — 2r + d bits per node (§4.5).
+    """
+
+    protocol: str = "sparse_seed"
+    r_bits: int = DEFAULT_R_BITS
+    rbar_bits: int = DEFAULT_RBAR_BITS
+    rseed_bits: int = DEFAULT_RSEED_BITS
+
+    def __post_init__(self):
+        if self.protocol not in ("naive", "varying", "sparse", "sparse_seed", "binary"):
+            raise ValueError(f"unknown communication protocol {self.protocol!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """End-to-end configuration for compressed gradient aggregation.
+
+    This is the knob surfaced by the training framework; it bundles an
+    :class:`EncoderSpec` with the mesh-level execution ``mode``:
+
+      * ``none``           — exact psum/pmean (baseline; Example 5 with p=1).
+      * ``gather_decode``  — paper-faithful star protocol: all_gather the
+        compressed representations over ``axes``, decode (average) locally.
+        Encoders are independent across nodes (Def. 2.1) via
+        ``fold_in(axis_index)``.
+      * ``shared_support`` — TPU-native variant (DESIGN.md §2): all nodes
+        sample the *same* fixed-k support, so the collective is a psum of a
+        length-k buffer.  Violates Def. 2.1 independence deliberately; exact
+        MSE in :func:`repro.core.mse.mse_fixed_k_shared`.
+      * ``dense_sim``      — functional simulation: encode per node, exact
+        pmean of the *dense* encoded vectors.  Bit-identical estimates to
+        gather_decode but without the wire savings; used to test encoders
+        under shard_map and to support variable-size-support encoders whose
+        message sizes are data-dependent (not SPMD-shape friendly).
+
+    ``axes`` are the mesh axes over which the mean is estimated (e.g.
+    ``("data",)`` in-pod, ``("pod",)`` for cross-DCN-only compression, or
+    ``("pod", "data")``).
+    """
+
+    encoder: EncoderSpec = dataclasses.field(default_factory=EncoderSpec)
+    mode: str = "none"
+    axes: Tuple[str, ...] = ("data",)
+    error_feedback: bool = False
+    wire_dtype: str = "bfloat16"
+    # Leaves smaller than this many elements are aggregated exactly (psum):
+    # biases/norm scales are a negligible fraction of the wire bytes and are
+    # disproportionately harmed by sparsification.
+    min_compress_size: int = 65536
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; want one of {MODES}")
+        if self.mode == "shared_support" and self.encoder.kind not in ("fixed_k", "identity"):
+            raise ValueError("shared_support mode requires the fixed_k encoder")
+
+
+def fixed_k_from_fraction(d: int, fraction: float) -> int:
+    """k = |S_i| for the fixed-size-support encoder, from a target fraction."""
+    return max(1, min(d, int(round(fraction * d))))

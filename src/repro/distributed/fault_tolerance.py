@@ -1,0 +1,54 @@
+"""Fault tolerance & straggler mitigation (DESIGN.md §5).
+
+The aggregation-level pieces live where they execute:
+  * unbiased partial aggregation — :func:`repro.core.collectives.partial_mean`
+    (mask-weighted mean over live nodes; the averaging decoder is
+    n-agnostic, so dropping a straggling pod for a step stays unbiased);
+  * deterministic per-step wire cost — the fixed-k encoder (§4.4), the
+    production default (no long-tail packets);
+  * checkpoint/restart + elastic resharding — :mod:`repro.checkpoint`.
+
+This module adds the *simulation/testing* half: a straggler/failure
+injector used by tests to exercise those paths deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.collectives import partial_mean  # noqa: F401  (re-export)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePlan:
+    """Deterministic failure schedule: node i is down at step t iff
+    hash(seed, t, i) < rate."""
+    rate: float = 0.0
+    seed: int = 0
+
+    def alive_mask(self, step: int, n: int) -> jax.Array:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        u = jax.random.uniform(key, (n,))
+        alive = u >= self.rate
+        # never kill everyone: node argmax(u) always survives
+        return alive.at[jnp.argmax(u)].set(True)
+
+    def local_alive(self, step: int, axes) -> jax.Array:
+        """Per-shard 0/1 scalar, callable inside shard_map."""
+        rank = jnp.zeros((), jnp.int32)
+        n = 1
+        for ax in axes:
+            rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            n *= jax.lax.axis_size(ax)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        u = jax.random.uniform(key, (n,))
+        alive = (u >= self.rate).at[jnp.argmax(u)].set(True)
+        return alive[rank].astype(jnp.float32)
+
+
+def robust_mean(x, step: int, axes, plan: FailurePlan):
+    """Exact mean over the nodes the failure plan left alive this step."""
+    alive = plan.local_alive(step, axes)
+    return partial_mean(x * alive, alive, axes)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot spots (encode paths).
+
+Each subpackage ships the kernel (pl.pallas_call + BlockSpec), a jit'd
+``ops.py`` wrapper (TPU -> compiled kernel; CPU -> oracle / interpret mode),
+and a pure-jnp ``ref.py`` oracle that tests assert against.
+"""

@@ -1,0 +1,42 @@
+"""jit'd wrapper: fused Bernoulli encoder over arbitrary-shape arrays.
+
+Pads the flat view to a (R, 128) grid multiple, runs the Pallas kernel
+(interpret mode off-TPU), and restores the shape.  Padding coordinates are
+encoded too (harmless — they decode to mu and are sliced away).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bernoulli_encode import bernoulli_encode as _kernel
+from repro.kernels.bernoulli_encode import ref as _ref
+
+_TILE = _kernel.BM * _kernel.LANES
+
+
+def bernoulli_encode(x, p, mu, seed, *, force_pallas: bool = False):
+    """Dense Eq.-(1) encoding of any-shape x with uniform probability p.
+
+    Args:
+      x: array, any shape/float dtype.
+      p: scalar probability in (0, 1].
+      mu: scalar node center.
+      seed: uint32-compatible scalar seed.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_pallas):
+        return _ref.bernoulli_encode(x, p, mu, seed)
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    npad = (-n) % _TILE
+    flat = jnp.pad(flat, (0, npad))
+    seed_u = jnp.asarray(seed, jnp.uint32)
+    seed_hi = (seed_u >> jnp.uint32(16)).astype(jnp.float32)
+    seed_lo = (seed_u & jnp.uint32(0xFFFF)).astype(jnp.float32)
+    scal = jnp.stack([jnp.asarray(p, jnp.float32), jnp.asarray(mu, jnp.float32),
+                      seed_hi, seed_lo]).reshape(1, 4)
+    y = _kernel.bernoulli_encode_2d(flat.reshape(-1, _kernel.LANES), scal,
+                                    interpret=not on_tpu)
+    return y.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused Bernoulli encoder (Eq. (1), uniform p).
+
+Bit-identical to the Pallas kernel: both draw the mask from
+repro.kernels.prng.uniform_hash(seed, global_coordinate_index).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import prng
+
+
+def bernoulli_encode(x, p, mu, seed):
+    """x: (..., d) -> dense encoded Y (Eq. (1)) with hash-derived mask.
+
+    Y(j) = X(j)/p − (1−p)/p·mu  if u_j < p else mu,  u_j = hash(seed, j).
+    The coordinate index is global across the flattened input.
+    """
+    shape = x.shape
+    flat = x.reshape(-1)
+    idx = jnp.arange(flat.shape[0], dtype=jnp.uint32)
+    u = prng.uniform_hash(jnp.uint32(seed), idx)
+    p32 = jnp.float32(p)
+    mu32 = jnp.float32(mu)
+    sent = u < p32
+    y = jnp.where(sent, flat.astype(jnp.float32) / p32 - (1.0 - p32) / p32 * mu32,
+                  mu32)
+    return y.astype(x.dtype).reshape(shape)

@@ -1,0 +1,47 @@
+"""jit'd wrapper for binary quantization: encode -> (packed, vmin, vmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.binary_quant import binary_quant as _kernel
+from repro.kernels.binary_quant import ref as _ref
+
+_TILE = _kernel.BM * _kernel.LANES
+
+
+def binary_encode(x, seed, *, force_pallas: bool = False):
+    """Stochastic 1-bit quantization of any-shape x.
+
+    Returns (packed uint8 of ceil(n/8) (padded) bytes, vmin, vmax).  Use
+    :func:`binary_decode` with the original shape to reconstruct.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    vmin = jnp.min(x).astype(jnp.float32)
+    vmax = jnp.max(x).astype(jnp.float32)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    npad = (-n) % _TILE
+    flat = jnp.pad(flat, (0, npad), constant_values=vmin)
+    if not (on_tpu or force_pallas):
+        packed, _, _ = _ref.binary_encode(flat, seed)
+        return packed, vmin, vmax
+    seed_u = jnp.asarray(seed, jnp.uint32)
+    scal = jnp.stack([
+        vmin, vmax,
+        (seed_u >> jnp.uint32(16)).astype(jnp.float32),
+        (seed_u & jnp.uint32(0xFFFF)).astype(jnp.float32),
+    ]).reshape(1, 4)
+    packed = _kernel.binary_encode_2d(flat.reshape(-1, _kernel.LANES), scal,
+                                      interpret=not on_tpu)
+    return packed.reshape(-1), vmin, vmax
+
+
+def binary_decode(packed, vmin, vmax, shape, dtype=jnp.float32):
+    """Inverse of binary_encode (dense Y_i of Example 4)."""
+    n = 1
+    for s in shape:
+        n *= s
+    y = _ref.binary_decode(packed.reshape(-1), vmin, vmax, (packed.size * 8,),
+                           dtype)
+    return y[:n].reshape(shape)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for stochastic binary quantization (Example 4 / [10]).
+
+encode: x -> (packed uint8 bits, vmin, vmax); decode: reconstruct Y where
+Y(j) = vmax with probability (x(j)−vmin)/Δ else vmin — using the shared
+hash PRNG so kernel and oracle are bit-identical.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import prng
+
+
+def _bits(x, vmin, vmax, seed):
+    flat = x.reshape(-1).astype(jnp.float32)
+    delta = (vmax - vmin).astype(jnp.float32)
+    dsafe = jnp.where(delta > 0, delta, 1.0)
+    p = jnp.where(delta > 0, (flat - vmin) / dsafe, 0.0)
+    idx = jnp.arange(flat.shape[0], dtype=jnp.uint32)
+    u = prng.uniform_hash(jnp.uint32(seed), idx)
+    return (u < p).astype(jnp.uint8)
+
+
+def binary_encode(x, seed):
+    """x: (..., d) with d % 8 == 0 after flattening -> (n//8 uint8, vmin, vmax)."""
+    vmin = jnp.min(x).astype(jnp.float32)
+    vmax = jnp.max(x).astype(jnp.float32)
+    bits = _bits(x, vmin, vmax, seed)
+    n = bits.shape[0]
+    assert n % 8 == 0, n
+    weights = (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8))
+    packed = jnp.sum(bits.reshape(-1, 8) * weights, axis=-1).astype(jnp.uint8)
+    return packed, vmin, vmax
+
+
+def binary_decode(packed, vmin, vmax, shape, dtype=jnp.float32):
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[:, None] >> shifts) & jnp.uint8(1)
+    y = jnp.where(bits.reshape(-1) > 0, vmax, vmin).astype(dtype)
+    return y.reshape(shape)

@@ -1,0 +1,73 @@
+"""jit'd wrapper for flash attention (forward + custom-VJP training path).
+
+TPU → the Pallas kernels; CPU → the model's XLA online-softmax path (the
+same math, bounded memory) via repro.models.attention.chunked_attention.
+Accepts the model's (B, S, H, hd) layout.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _kernel
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_train(q, k, v, causal, window, q_offset, block_q, block_k,
+                 interpret):
+    out, _ = _kernel.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, block_q, block_k,
+               interpret):
+    out, lse = _kernel.flash_attention_fwd(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, block_q, block_k, interpret,
+               res, do):
+    q, k, v, out, lse = res
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                       # (B, Hq, Sq)
+    dq, dk, dv = _kernel.flash_attention_bwd(
+        q, k, v, do, lse, delta, causal=causal, window=window,
+        q_offset=q_offset, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_train.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    force_pallas: bool = False, interpret: bool | None = None):
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    Differentiable: the backward pass runs the FA2-style Pallas kernels
+    (scores recomputed blockwise in VMEM; residuals are only o and lse).
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_pallas):
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset,
+                                 chunk_q=block_q, chunk_k=block_k)
+    if interpret is None:
+        interpret = not on_tpu
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = _flash_train(qt, kt, vt, causal, window, q_offset,
+                       block_q, block_k, interpret)
+    return out.transpose(0, 2, 1, 3)

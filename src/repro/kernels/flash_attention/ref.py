@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention: full-softmax GQA attention with
+causal / sliding-window masks."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, q_offset: int = 0):
+    """q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd), Hq % Hkv == 0.
+
+    Returns (B, Sq, Hq, hd).  f32 softmax, output in q.dtype.
+    """
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    qr = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, kf) * hd ** -0.5
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(b, sq, hq, hd).astype(q.dtype)

@@ -1,0 +1,53 @@
+"""Public jit'd wrapper for the Walsh–Hadamard transform.
+
+Dispatch policy:
+* TPU backend        → Pallas MXU kernel (kron-factorized, hadamard.py).
+* CPU / other        → Pallas kernel in interpret mode for small sizes in
+  tests, but by default the pure-jnp oracle (ref.py) — identical results,
+  no interpreter overhead.  The kernel is the TPU *target*; correctness is
+  guaranteed by the allclose sweeps in tests/test_kernel_hadamard.py.
+
+Vectors longer than MAX_D are processed in independent MAX_D chunks (a
+block-diagonal rotation; standard bucketing — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hadamard import hadamard as _kernel
+from repro.kernels.hadamard import ref as _ref
+
+MAX_D = 1 << 20
+
+
+def _factorize(d: int):
+    """Split d = d1·d2 with d1, d2 powers of two, as square as possible."""
+    lg = d.bit_length() - 1
+    l1 = lg // 2
+    return 1 << l1, 1 << (lg - l1)
+
+
+def fwht(x, *, force_pallas: bool = False, interpret: bool | None = None):
+    """Unnormalized Walsh–Hadamard transform along the last axis.
+
+    x: (..., d) with d a power of two, d ≤ 2**20.
+    """
+    d = x.shape[-1]
+    if d & (d - 1):
+        raise ValueError(f"fwht needs power-of-two length, got {d}")
+    if d > MAX_D:
+        raise ValueError(f"fwht supports d ≤ {MAX_D}; chunk the input "
+                         "(repro.core.compression handles this)")
+    on_tpu = jax.default_backend() == "tpu"
+    if not (on_tpu or force_pallas):
+        return _ref.fwht(x)
+    if interpret is None:
+        interpret = not on_tpu
+    shape = x.shape
+    x2 = x.reshape(-1, d)
+    if d < 4:  # degenerate sizes: oracle
+        return _ref.fwht(x).reshape(shape)
+    d1, d2 = _factorize(d)
+    return _kernel.fwht_pallas(x2, d1=d1, d2=d2,
+                               interpret=interpret).reshape(shape)

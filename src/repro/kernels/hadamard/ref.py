@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the fast Walsh–Hadamard transform (Sylvester order).
+
+H_1 = [1]; H_{2m} = [[H_m, H_m], [H_m, −H_m]].  fwht(x) = H_d @ x, unnormalized.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fwht(x):
+    """Classic O(d log d) butterfly.  x: (..., d), d a power of two."""
+    d = x.shape[-1]
+    assert d & (d - 1) == 0, f"d must be a power of two, got {d}"
+    shape = x.shape
+    x = x.reshape(-1, d)
+    h = 1
+    while h < d:
+        x = x.reshape(-1, d // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(-1, d)
+        h *= 2
+    return x.reshape(shape)
+
+
+def hadamard_matrix(d: int, dtype=jnp.float32):
+    """Explicit H_d via the parity trick: H[i,j] = (−1)^{popcount(i & j)}."""
+    i = jnp.arange(d)[:, None]
+    j = jnp.arange(d)[None, :]
+    bits = i & j
+    # popcount parity of a 32-bit int
+    v = bits
+    parity = jnp.zeros_like(v)
+    for s in range(32):
+        parity = parity ^ ((v >> s) & 1)
+    return (1 - 2 * parity).astype(dtype)

@@ -1,0 +1,40 @@
+"""Counter-based in-kernel PRNG shared by the encoding kernels.
+
+The encoders need one uniform variate per gradient coordinate.  Generating
+them with jax.random *outside* the kernel would double HBM traffic (write u,
+read u) on a memory-bound op, so the kernels synthesize randomness in
+registers from (seed, coordinate-index) with a splitmix32/murmur3-style
+integer hash.  The hash uses only uint32 ops available inside Pallas TPU
+kernels (and in plain XLA, so kernel and oracle are bit-identical).
+
+Statistical quality is adequate for unbiased sparsification masks (verified
+empirically in tests/test_kernel_bernoulli.py::test_mask_statistics); it is
+NOT a cryptographic or jax.random-grade generator and is never used for
+model initialization.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Plain ints (not jnp arrays): Pallas kernels may not capture array
+# constants from module scope; these fold to scalar literals at trace time.
+_GOLDEN = 0x9E3779B9
+_M1 = 0x85EBCA6B
+_M2 = 0xC2B2AE35
+
+
+def hash_u32(seed, idx):
+    """Murmur3 fmix32 of (seed-offset counter).  seed, idx: uint32 arrays."""
+    h = (idx.astype(jnp.uint32) * jnp.uint32(_GOLDEN)) + seed.astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(_M1)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(_M2)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def uniform_hash(seed, idx):
+    """U[0,1) float32 from the top 24 bits of hash_u32."""
+    bits = hash_u32(seed, idx) >> jnp.uint32(8)
+    return bits.astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build the real train/serve step (the same builders used by
+the trainer and the serving engine), lower it against ShapeDtypeStruct
+inputs (no allocation), compile, and record:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits HBM),
+  * cost_analysis()    — per-device FLOPs / bytes for §Roofline,
+  * the collective schedule parsed from the compiled HLO (wire bytes).
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json; the
+EXPERIMENTS.md tables are generated from these by launch/report.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--quick]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import SHAPES  # noqa: E402
+from repro.configs.registry import get_config, get_run_config, list_archs  # noqa: E402
+from repro.launch import roofline as rl_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import encdec as encdec_lib  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+from repro.optim import optimizers as opt_lib  # noqa: E402
+from repro.serving import engine  # noqa: E402
+from repro.train import train_step as ts  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _sds(shape, dtype, mesh, pspec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, pspec))
+
+
+def _param_sds(mesh, abstract_params, specs):
+    return {k: _sds(v.shape, v.dtype, mesh, P(*specs[k]))
+            for k, v in abstract_params.items()}
+
+
+def batch_sds(mesh, cfg, shape, bspecs, *, with_labels=True):
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_patches
+        out["tokens"] = _sds((b, s_text), jnp.int32, mesh, bspecs["tokens"])
+        out["patches"] = _sds((b, cfg.num_patches, cfg.d_model), jnp.float32,
+                              mesh, bspecs["patches"])
+        if with_labels:
+            out["labels"] = _sds((b, s_text), jnp.int32, mesh, bspecs["labels"])
+            out["mask"] = _sds((b, s_text), jnp.float32, mesh, bspecs["mask"])
+    elif cfg.family == "encdec":
+        enc_s = encdec_lib.enc_seq_padded(cfg, 16)
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, bspecs["tokens"])
+        out["frames"] = _sds((b, enc_s, cfg.d_model), jnp.float32, mesh,
+                             bspecs["frames"])
+        if with_labels:
+            out["labels"] = _sds((b, s), jnp.int32, mesh, bspecs["labels"])
+            out["mask"] = _sds((b, s), jnp.float32, mesh, bspecs["mask"])
+    else:
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, bspecs["tokens"])
+        if with_labels:
+            out["labels"] = _sds((b, s), jnp.int32, mesh, bspecs["labels"])
+            out["mask"] = _sds((b, s), jnp.float32, mesh, bspecs["mask"])
+    return out
+
+
+def lower_cell(mesh, arch: str, shape_name: str, *, multi_pod: bool,
+               run_override=None):
+    """Lower + compile one cell; returns (record dict, compiled)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cfg.supports(shape):
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch: long_500k excluded "
+                          "(DESIGN.md §4)"}, None
+    run = run_override or get_run_config(arch, shape_name, multi_pod=multi_pod)
+    msizes = ts.mesh_sizes_of(mesh)
+    n_dev = 1
+    for v in msizes.values():
+        n_dev *= v
+    ctx = model_lib.make_ctx(cfg, run, msizes)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step_fn, _, specs, bspecs = ts.build_train_step(mesh, cfg, run, shape)
+        aparams, _ = ts.abstract_specs(jax.random.PRNGKey(0), cfg, ctx,
+                                       msizes, run)
+        p_sds = _param_sds(mesh, aparams, specs)
+        opt_sds = opt_lib.AdamWState(
+            step=_sds((), jnp.int32, mesh, P()),
+            m={k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
+               for k, v in aparams.items()},
+            v={k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
+               for k, v in aparams.items()})
+        use_ef = run.compression.error_feedback
+        ef_sds = ({k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
+                   for k, v in aparams.items()} if use_ef else
+                  {k: _sds((), jnp.float32, mesh, P()) for k in aparams})
+        b_sds = batch_sds(mesh, cfg, shape, bspecs)
+        step_sds = _sds((), jnp.int32, mesh, P())
+        lowered = step_fn.lower(p_sds, opt_sds, ef_sds, b_sds, step_sds)
+        tokens = shape.global_batch * shape.seq_len
+        mf = 6.0 * cfg.active_param_count() * tokens
+    else:
+        prefill_fn, decode_fn, specs, info = engine.build_serve_fns(
+            mesh, cfg, run, shape)
+        aparams, _ = ts.abstract_specs(jax.random.PRNGKey(0), cfg, ctx,
+                                       msizes, run)
+        # production serving stores weights in bf16 (layers cast at use
+        # anyway); int/norm leaves keep their dtype.
+        aparams = {k: jax.ShapeDtypeStruct(
+            v.shape, jnp.bfloat16 if v.dtype == jnp.float32 else v.dtype)
+            for k, v in aparams.items()}
+        p_sds = _param_sds(mesh, aparams, specs)
+        if shape.kind == "prefill":
+            b_sds = batch_sds(mesh, cfg, shape, info["batch"],
+                              with_labels=False)
+            lowered = prefill_fn.lower(p_sds, b_sds)
+            tokens = shape.global_batch * shape.seq_len
+        else:  # decode
+            cshapes = engine.global_cache_shapes(cfg, ctx, shape, msizes)
+            c_sds = jax.tree.map(
+                lambda s, ps: _sds(s.shape, s.dtype, mesh, ps),
+                cshapes, engine.cache_pspecs(cfg, ctx, info["baxes"]))
+            tok_sds = _sds((shape.global_batch, 1), jnp.int32, mesh,
+                           info["tok"])
+            pos_sds = _sds((), jnp.int32, mesh, P())
+            lowered = decode_fn.lower(p_sds, c_sds, tok_sds, pos_sds)
+            tokens = shape.global_batch  # one new token per sequence
+        mf = 2.0 * cfg.active_param_count() * tokens
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    rl, colls = rl_lib.analyze(compiled, mf, n_dev, hlo_text=hlo)
+    ma = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(msizes[a]) for a in mesh.axis_names),
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "args_bytes_dev": int(ma.argument_size_in_bytes),
+            "output_bytes_dev": int(ma.output_size_in_bytes),
+            "temp_bytes_dev": int(ma.temp_size_in_bytes),
+            "alias_bytes_dev": int(ma.alias_size_in_bytes),
+            "total_dev": int(ma.argument_size_in_bytes
+                             + ma.output_size_in_bytes
+                             + ma.temp_size_in_bytes
+                             - ma.alias_size_in_bytes),
+        },
+        "roofline": rl.as_dict(),
+        "collectives": {"counts": colls.counts,
+                        "wire_bytes_by_op": colls.bytes_by_op},
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "compression": dataclasses_to_str(run.compression),
+    }
+    return rec, compiled
+
+
+def dataclasses_to_str(c):
+    return (f"{c.mode}:{c.encoder.kind}:f={c.encoder.fraction:.4f}:"
+            f"axes={','.join(c.axes)}" if c.mode != "none" else "none")
+
+
+def run_cell(arch, shape_name, multi_pod, outdir):
+    tag = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(os.path.join(outdir, tag), exist_ok=True)
+    path = os.path.join(outdir, tag, f"{arch}__{shape_name}.json")
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        rec, _ = lower_cell(mesh, arch, shape_name, multi_pod=multi_pod)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": "error", "error": repr(e),
+               "trace": traceback.format_exc()[-2000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        r = rec["roofline"]
+        extra = (f" dom={r['dominant']} comp={r['compute_s']:.3f}s "
+                 f"mem={r['memory_s']:.3f}s coll={r['collective_s']:.3f}s "
+                 f"hbm={rec['memory']['total_dev'] / 2**30:.2f}GiB "
+                 f"compile={rec['compile_s']}s")
+    print(f"[{status}] {tag} {arch} {shape_name}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    cells = []
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for mp in meshes:
+        for a, s in cells:
+            run_cell(a, s, mp, args.out)
+
+
+if __name__ == "__main__":
+    main()

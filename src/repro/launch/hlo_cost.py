@@ -1,0 +1,433 @@
+"""Loop-aware cost analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE — a
+layer-scanned transformer therefore under-reports FLOPs/bytes/collectives
+by the trip count (≈ num_layers × microbatches).  This module re-derives
+the three roofline inputs from the HLO text with loop multiplicity:
+
+  1. split the module into computations; build per-computation symbol
+     tables (instruction name → shape) including header parameters;
+  2. build the call graph (fusion ``calls=``, while ``condition=/body=``,
+     ``to_apply=``) and propagate execution multipliers from ENTRY, where a
+     while body's multiplier is the parent's × trip count (trip = the
+     largest integer constant in the condition computation — the loop
+     bound jax emits for scan/fori/map);
+  3. FLOPs: every ``dot`` op contributes 2·|result|·|contraction| × mult;
+  4. bytes: for every instruction in non-fused computations, operand+result
+     bytes × mult (fusion bodies are skipped — their internals stay in
+     registers/cache; the fusion call site is counted) — the same
+     definition XLA's per-op "bytes accessed" uses;
+  5. collectives: per-op ring-cost wire bytes × mult (see ring factors in
+     repro.launch.roofline).
+
+Validated against hand-computed counts in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^)]*\))|(?:[\w\[\]\{\},]+))\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    # copies of loop-carried tuples are elided/aliased by buffer assignment;
+    # counting them would charge full stacked-parameter arrays per layer.
+    "copy", "copy-start", "copy-done",
+}
+
+
+def shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str       # result shape string
+    op: str
+    rest: str        # full text after '='
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]
+    instrs: List[Instr]
+    symbols: Dict[str, str]
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line) if line and not line.startswith(" ") else None
+            if m and line.endswith("{"):
+                params = {}
+                for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\]\{\},]+))",
+                                      m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(1), params, [], dict(params))
+            continue
+        if s == "}" or s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, rest = im.group(1), im.group(2)
+        om = _OP_RE.match(rest)
+        if not om:
+            continue
+        shape, op = om.group(1), om.group(2)
+        cur.symbols[name] = shape
+        cur.instrs.append(Instr(name, shape, op, rest))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _entry_name(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def trip_count(cond: Computation) -> int:
+    best = 1
+    for i in cond.instrs:
+        for cm in _CONST_INT_RE.finditer(i.rest):
+            best = max(best, int(cm.group(1)))
+    return best
+
+
+def multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {entry: 1.0}
+    fused_bodies = set()
+    order = [entry]
+    seen = {entry}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult.get(cname, 1.0)
+        for i in comp.instrs:
+            edges: List[Tuple[str, float]] = []
+            cm = _CALLS_RE.search(i.rest)
+            if cm:
+                edges.append((cm.group(1), 1.0))
+                if i.op == "fusion":
+                    fused_bodies.add(cm.group(1))
+            am = _APPLY_RE.search(i.rest)
+            if am:
+                edges.append((am.group(1), 1.0))
+                fused_bodies.add(am.group(1))  # scalar reduce bodies
+            bm = _BODY_RE.search(i.rest)
+            condm = _COND_RE.search(i.rest)
+            if bm and condm and condm.group(1) in comps:
+                t = trip_count(comps[condm.group(1)])
+                edges.append((bm.group(1), float(t)))
+                edges.append((condm.group(1), float(t)))
+            for child, w in edges:
+                mult[child] = mult.get(child, 0.0) + m * w
+                if child not in seen:
+                    seen.add(child)
+                    order.append(child)
+    mult["__fused__"] = 0.0  # marker storage
+    multipliers.fused_bodies = fused_bodies  # type: ignore[attr-defined]
+    return mult
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    coll_wire_bytes: float
+    coll_counts: Dict[str, int]        # static op counts
+    coll_exec: Dict[str, float]        # execution counts (× trip)
+    coll_bytes_by_op: Dict[str, float]
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+def _wire_bytes(op: str, b: float, s: int) -> float:
+    if s <= 1:
+        return 0.0
+    if op == "all-gather":
+        return b * (s - 1) / s
+    if op == "all-reduce":
+        return 2 * b * (s - 1) / s
+    if op == "reduce-scatter":
+        return b * (s - 1)
+    if op == "all-to-all":
+        return b * (s - 1) / s
+    return float(b)  # collective-permute
+
+
+def _operand_names(i: Instr) -> List[str]:
+    args = i.rest.split("(", 1)
+    if len(args) < 2:
+        return []
+    return _OPERAND_RE.findall(args[1].split(")", 1)[0])
+
+
+_CHAIN_OPS = ("convert", "bitcast", "copy", "reshape", "transpose")
+# convert chains matter doubly on this CPU dry-run: XLA:CPU legalizes bf16
+# by converting whole buffers to f32, which would charge phantom f32 cache
+# copies that do not exist on the TPU target.  Resolving through the chain
+# restores the TPU-native accounting (DESIGN.md §6 assumptions log).
+
+
+def _resolver(fcomp: Computation):
+    """Map every symbol to its chain-source (through convert/bitcast/...)."""
+    src: Dict[str, str] = {}
+
+    def resolve(name: str) -> str:
+        seen = name
+        while True:
+            d = src.get(seen)
+            if d is None or d == seen:
+                return seen
+            seen = d
+
+    for fi in fcomp.instrs:
+        if fi.op in _CHAIN_OPS:
+            ops = _operand_names(fi)
+            if len(ops) == 1:
+                src[fi.name] = ops[0]
+    return lambda n: _follow(src, n)
+
+
+def _follow(src: Dict[str, str], n: str) -> str:
+    while n in src:
+        n = src[n]
+    return n
+
+
+def _fusion_bytes(res: float, ops: List[str], comp: Computation,
+                  fcomp: Computation) -> float:
+    """Traffic of one fusion call, alias-aware.
+
+    Scan residual stacking / in-place accumulation appears as fused
+    dynamic-update-slice whose operand 0 is (a convert/bitcast chain of) a
+    fusion parameter: the big buffer is aliased in place and only the
+    update window moves.  Parameters consumed only through
+    dynamic-slice/gather are charged the slice, not the stack.
+    """
+    resolve = _resolver(fcomp)
+
+    # uses attributed to chain-sources; chain ops themselves don't count
+    uses: Dict[str, List[Tuple[Instr, int]]] = {}
+    for fi in fcomp.instrs:
+        if fi.op in _CHAIN_OPS:
+            continue
+        for idx, o in enumerate(_operand_names(fi)):
+            uses.setdefault(resolve(o), []).append((fi, idx))
+
+    dus_alias = set()
+    dus_windows = 0.0
+    dus_roots = set()
+    for fi in fcomp.instrs:
+        if fi.op != "dynamic-update-slice":
+            continue
+        fo = _operand_names(fi)
+        if fo and resolve(fo[0]) in fcomp.params:
+            dus_alias.add(resolve(fo[0]))
+            dus_roots.add(fi.name)
+            if len(fo) > 1:
+                # write + (worst-case) read of the window
+                dus_windows += 2.0 * shape_bytes(fcomp.symbols.get(fo[1], ""))
+
+    # result side: if the fusion's root is (a chain of) an aliasing dus,
+    # only the windows move; otherwise charge the full result minus aliased
+    # accumulator shapes (multi-output tuples fall back to the subtract).
+    root = fcomp.instrs[-1] if fcomp.instrs else None
+    if root is not None and (root.name in dus_roots
+                             or resolve(root.name) in dus_roots):
+        res_total = dus_windows
+    else:
+        res_total = float(res)
+        for p in dus_alias:
+            res_total -= shape_bytes(fcomp.params[p])
+        res_total = max(res_total, 0.0) + dus_windows
+
+    # operand side
+    fparams = list(fcomp.params)
+    total = res_total
+    for idx, o in enumerate(ops):
+        pname = fparams[idx] if idx < len(fparams) else None
+        if pname is None:
+            total += shape_bytes(comp.symbols.get(o, ""))
+            continue
+        us = uses.get(pname, [])
+        if pname in dus_alias and all(
+                u.op == "dynamic-update-slice" and j == 0 for u, j in us):
+            continue  # pure in-place accumulator
+        if us and all(u.op in ("dynamic-slice", "gather") for u, _ in us):
+            total += sum(shape_bytes(u.shape) for u, _ in us)
+        else:
+            total += shape_bytes(fcomp.params[pname])
+    return total
+
+
+def _instr_bytes(i: Instr, comp: Computation,
+                 comps: Dict[str, Computation]) -> float:
+    """HBM traffic model per instruction (see module docstring)."""
+    res = shape_bytes(i.shape)
+    ops = _operand_names(i)
+    if i.op == "dynamic-slice":
+        return 2.0 * res
+    if i.op == "dynamic-update-slice":
+        upd = shape_bytes(comp.symbols.get(ops[1], "")) if len(ops) > 1 else res
+        return 2.0 * upd  # read+write the updated window; rest is aliased
+    if i.op == "fusion":
+        cm = _CALLS_RE.search(i.rest)
+        fcomp = comps.get(cm.group(1)) if cm else None
+        if fcomp is not None:
+            return _fusion_bytes(res, ops, comp, fcomp)
+        return float(res) + sum(shape_bytes(comp.symbols.get(o, ""))
+                                for o in ops)
+    # default: operands + result
+    return float(res) + sum(shape_bytes(comp.symbols.get(o, "")) for o in ops)
+
+
+LEGALIZATION_SIZE_THRESHOLD = 1 << 20  # 1 MiB
+
+
+def _legalized_dtype_factor(i: Instr, comp: Computation,
+                            base_op: str = "") -> float:
+    """XLA:CPU legalizes bf16 collectives by upcasting to f32 (insert
+    convert → run the collective in f32); on the TPU target they run
+    natively in bf16.  Detection: the operand's producer is a convert(-ish
+    fusion) from bf16 — or, for all-gather / reduce-scatter / all-to-all /
+    collective-permute buffers above 1 MiB, by construction: this
+    framework's SP activation gathers/scatters, FSDP weight gathers and EP
+    dispatch all carry bf16; its genuine f32 collectives are exactly the
+    all-reduces (exact gradient/loss psums), which are exempt from the
+    size heuristic.  Charge bf16 wire (factor 1/2)."""
+    if "f32[" not in i.shape:
+        return 1.0
+    ops = _operand_names(i)
+    if ops:
+        for fi in comp.instrs:
+            if fi.name != ops[0]:
+                continue
+            if "convert" in fi.name or fi.op == "convert":
+                for o2 in _operand_names(fi):
+                    if "bf16[" in comp.symbols.get(o2, ""):
+                        return 0.5
+            break
+    if (base_op != "all-reduce"
+            and shape_bytes(i.shape) > LEGALIZATION_SIZE_THRESHOLD):
+        return 0.5
+    return 1.0
+
+
+def analyze_text(text: str) -> HloCost:
+    comps = parse_computations(text)
+    entry = _entry_name(comps, text)
+    mult = multipliers(comps, entry)
+    fused = getattr(multipliers, "fused_bodies", set())
+
+    flops = 0.0
+    byts = 0.0
+    cw = 0.0
+    ccounts: Dict[str, int] = {}
+    cexec: Dict[str, float] = {}
+    cbytes: Dict[str, float] = {}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fused
+        for i in comp.instrs:
+            base_op = i.op.replace("-start", "").replace("-done", "")
+            # ---- flops: dots everywhere (incl. inside fusions)
+            if base_op in ("dot", "dot_general") or i.op.startswith("dot"):
+                lm = _LHS_CONTRACT_RE.search(i.rest)
+                ops = _OPERAND_RE.findall(i.rest.split("(", 1)[1])
+                lhs_shape = comp.symbols.get(ops[0]) if ops else None
+                if lm is not None and lhs_shape:
+                    sd = shape_dims(lhs_shape)
+                    if sd:
+                        dims = sd[0][1]
+                        contract = 1
+                        for idx in lm.group(1).split(","):
+                            if idx:
+                                contract *= dims[int(idx)]
+                        out_elems = 1
+                        for _, od in shape_dims(i.shape):
+                            for d in od:
+                                out_elems *= d
+                        flops += 2.0 * out_elems * contract * m
+            # ---- collectives
+            if base_op in COLLECTIVE_OPS and "-done" not in i.op:
+                b = shape_bytes(i.shape) * _legalized_dtype_factor(
+                    i, comp, base_op)
+                s = _group_size(i.rest)
+                w = _wire_bytes(base_op, b, s)
+                ccounts[base_op] = ccounts.get(base_op, 0) + 1
+                cexec[base_op] = cexec.get(base_op, 0.0) + m
+                cbytes[base_op] = cbytes.get(base_op, 0.0) + w * m
+                cw += w * m
+            # ---- bytes (skip fusion internals and bookkeeping ops)
+            if in_fusion or i.op in _SKIP_BYTES_OPS:
+                continue
+            byts += _instr_bytes(i, comp, comps) * m
+    return HloCost(flops=flops, bytes=byts, coll_wire_bytes=cw,
+                   coll_counts=ccounts, coll_exec=cexec,
+                   coll_bytes_by_op=cbytes)

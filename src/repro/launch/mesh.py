@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis maps
+onto DCN links between pods — it is the default compression axis for the
+paper's gradient aggregation (DESIGN.md §2).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count is locked at first use).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests."""
+    return jax.make_mesh((data, model), ("data", "model"))

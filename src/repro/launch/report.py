@@ -1,0 +1,134 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.launch.report [--out experiments/tables.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+HERE = os.path.dirname(__file__)
+DRYRUN = os.path.abspath(os.path.join(HERE, "..", "..", "..", "experiments",
+                                      "dryrun"))
+
+ARCH_ORDER = ["qwen3-4b", "h2o-danube-3-4b", "minitron-4b",
+              "mistral-large-123b", "whisper-medium", "qwen2-moe-a2.7b",
+              "olmoe-1b-7b", "mamba2-130m", "jamba-v0.1-52b",
+              "llava-next-34b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh_tag: str) -> List[Dict]:
+    out = []
+    d = os.path.join(DRYRUN, mesh_tag)
+    if not os.path.isdir(d):
+        return out
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    key = {a: i for i, a in enumerate(ARCH_ORDER)}
+    skey = {s: i for i, s in enumerate(SHAPE_ORDER)}
+    out.sort(key=lambda r: (key.get(r["arch"], 99), skey.get(r["shape"], 9)))
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | status | HBM GiB/dev | collectives "
+             "(exec counts) | wire GB/dev | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} | — | "
+                         f"{reason} | — | — |")
+            continue
+        colls = ", ".join(f"{k}×{round(v)}" for k, v in
+                          sorted(r["collectives"]["counts"].items()))
+        wire = r["roofline"]["wire_bytes_dev"] / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{fmt_bytes(r['memory']['total_dev'])} | {colls or '—'} | "
+            f"{wire:.1f} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+_FSDP_ARCHS = {"mistral-large-123b", "jamba-v0.1-52b", "llava-next-34b"}
+
+
+def bottleneck_note(r: Dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    rl = r["roofline"]
+    dom = rl["dominant"]
+    arch, shape = r["arch"], r["shape"]
+    kind = ("train" if "train" in shape
+            else "prefill" if "prefill" in shape else "decode")
+    if dom == "memory":
+        if kind == "decode":
+            if arch in _FSDP_ARCHS:
+                return ("weight streaming dominates at 1 token/step: "
+                        "grow decode batch or quantize weights (int8)")
+            return ("KV-cache + weight streaming: fuse decode attention and "
+                    "grow per-chip batch")
+        if arch == "mamba2-130m":
+            return ("SSD chunk intermediates: fuse the chunk scan into a "
+                    "Pallas kernel / larger chunk size")
+        return ("materialized attention-score tiles (XLA can't fuse "
+                "dot-softmax-dot): flash-attention kernel (§Perf A)")
+    if dom == "collective":
+        if arch in _FSDP_ARCHS and kind == "train":
+            return ("FSDP weight gathers × microbatches: fewer microbatches "
+                    "(needs flash-kernel memory headroom, §Perf B)")
+        if kind == "train":
+            return ("SP gathers ∝ B_loc·(tp−1)/tp: re-factor mesh toward "
+                    "more DP / less TP (§Perf A2)")
+        return "weight gathers at 1 token/step: cache gathered weights"
+    return ("compute-bound: cut remat recompute and causal-mask waste "
+            "(causal-aware chunk scheduling)")
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful-FLOPs ratio | roofline fraction | "
+             "what moves the dominant term |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"**{rl['dominant']}** | {rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} | {bottleneck_note(r)} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    chunks = []
+    for tag, title in (("pod16x16", "single pod (16×16 = 256 chips)"),
+                       ("pod2x16x16", "multi-pod (2×16×16 = 512 chips)")):
+        recs = load(tag)
+        if not recs:
+            continue
+        chunks.append(f"### Dry-run — {title}\n\n{dryrun_table(recs)}\n")
+        if tag == "pod16x16":
+            chunks.append(f"### Roofline — {title}\n\n{roofline_table(recs)}\n")
+    text = "\n".join(chunks)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,190 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds per step:
+
+    compute    = HLO_FLOPs_per_device   / 197e12      (bf16 peak, TPU v5e)
+    memory     = HLO_bytes_per_device   / 819e9       (HBM bw)
+    collective = wire_bytes_per_device  / 50e9        (ICI per-link bw)
+
+``cost_analysis`` is per-device for SPMD modules.  Collective bytes are not
+in cost_analysis: we parse the compiled HLO text, take every collective
+op's result shape and apply standard ring-cost factors with the group size
+S parsed from replica_groups:
+
+    all-gather        (S−1)/S · out_bytes      (out = gathered buffer)
+    all-reduce        2·(S−1)/S · buf_bytes
+    reduce-scatter    (S−1) · out_bytes        (out = scattered piece)
+    all-to-all        (S−1)/S · buf_bytes
+    collective-permute  1 · out_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [G, S] <= [N]: rows are groups of size S
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_op: Dict[str, float]        # wire bytes per device
+    result_bytes_by_op: Dict[str, float]
+    lines: List[str]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    wire: Dict[str, float] = {}
+    raw: Dict[str, float] = {}
+    lines: List[str] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = shape_bytes(shape_str)
+        s = group_size(line)
+        if s <= 1:
+            continue
+        if op == "all-gather":
+            w = b * (s - 1) / s
+        elif op == "all-reduce":
+            w = 2 * b * (s - 1) / s
+        elif op == "reduce-scatter":
+            w = b * (s - 1)
+        elif op == "all-to-all":
+            w = b * (s - 1) / s
+        else:  # collective-permute
+            w = b
+        counts[op] = counts.get(op, 0) + 1
+        wire[op] = wire.get(op, 0.0) + w
+        raw[op] = raw.get(op, 0.0) + b
+        lines.append(line.strip()[:160])
+    return CollectiveStats(counts, wire, raw, lines)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_dev: float
+    bytes_dev: float
+    wire_bytes_dev: float
+    model_flops_dev: float
+    steps_per_call: int = 1
+
+    @property
+    def compute_s(self):
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self):
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.wire_bytes_dev / LINK_BW
+
+    @property
+    def dominant(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self):
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self):
+        return self.model_flops_dev / self.flops_dev if self.flops_dev else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """Fraction of peak achieved *if* the step runs at its dominant
+        bound: useful model flops / (bound_s · PEAK)."""
+        if self.bound_s == 0:
+            return 0.0
+        return self.model_flops_dev / (self.bound_s * PEAK_FLOPS)
+
+    def as_dict(self):
+        return {
+            "flops_dev": self.flops_dev, "bytes_dev": self.bytes_dev,
+            "wire_bytes_dev": self.wire_bytes_dev,
+            "model_flops_dev": self.model_flops_dev,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "raw_cost_analysis": getattr(self, "raw_cost_analysis", None),
+        }
+
+
+def analyze(compiled, model_flops_total: float, num_devices: int,
+            hlo_text: Optional[str] = None) -> Tuple[Roofline, CollectiveStats]:
+    """Roofline terms from the compiled artifact.
+
+    Primary source is the loop-aware HLO text analysis (repro.launch.hlo_cost)
+    — XLA's cost_analysis() counts while-loop bodies once, under-reporting
+    scanned layers by the trip count.  The raw cost_analysis numbers are
+    retained in the returned stats for cross-checking.
+    """
+    from repro.launch import hlo_cost
+    ca = compiled.cost_analysis() or {}
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = hlo_cost.analyze_text(text)
+    colls = CollectiveStats(counts=hc.coll_counts,
+                            bytes_by_op=hc.coll_bytes_by_op,
+                            result_bytes_by_op={},
+                            lines=[f"exec_counts={hc.coll_exec}"])
+    rl = Roofline(flops_dev=hc.flops, bytes_dev=hc.bytes,
+                  wire_bytes_dev=hc.coll_wire_bytes,
+                  model_flops_dev=model_flops_total / num_devices)
+    rl.raw_cost_analysis = {"flops": float(ca.get("flops", 0.0)),
+                            "bytes": float(ca.get("bytes accessed", 0.0))}
+    return rl, colls

@@ -1,0 +1,190 @@
+"""GQA attention with qk-norm, sliding windows, chunked (memory-bounded)
+softmax, cross-attention and KV-cache decode — manual TP over q-heads.
+
+Memory-efficient attention: online-softmax over KV chunks inside a scan
+(Rabe–Staats / flash-attention schedule expressed in XLA), so the compiled
+buffer footprint is O(S·chunk) instead of O(S²) — required for the
+prefill_32k dry-run cells to fit HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    """Per-shard attention dimensions (derived from config + ctx.tp)."""
+    q_heads: int          # global, padded to a multiple of tp
+    kv_heads: int         # global
+    head_dim: int
+    q_local: int
+    kv_local: int         # local kv heads (>=1; replicated when kv < tp)
+    kv_replicated: bool   # kv weights replicated over the model axis
+
+
+def attn_dims(num_heads: int, num_kv_heads: int, head_dim: int, tp: int) -> AttnDims:
+    qp = common.ceil_to(num_heads, tp)
+    kv_rep = num_kv_heads < tp
+    return AttnDims(
+        q_heads=qp, kv_heads=num_kv_heads, head_dim=head_dim,
+        q_local=qp // tp,
+        kv_local=num_kv_heads if kv_rep else num_kv_heads // tp,
+        kv_replicated=kv_rep)
+
+
+def init_attention(pb: common.ParamBuilder, prefix: str, layers: int,
+                   d_model: int, dims: AttnDims, qk_norm: bool,
+                   fsdp: Optional[str], cross: bool = False):
+    """Stacked (over `layers`) attention params.  TP shards q-heads; kv
+    weights are head-sharded when kv_heads >= tp, else replicated (their
+    gradient then syncs over the model axis via the spec rule)."""
+    m = "model"
+    kv_spec = None if dims.kv_replicated else m
+    scale = d_model ** -0.5
+    pb.add(f"{prefix}.wq", (layers, d_model, dims.q_heads, dims.head_dim),
+           (None, fsdp, m, None), scale=scale)
+    pb.add(f"{prefix}.wk", (layers, d_model, dims.kv_heads, dims.head_dim),
+           (None, fsdp, kv_spec, None), scale=scale)
+    pb.add(f"{prefix}.wv", (layers, d_model, dims.kv_heads, dims.head_dim),
+           (None, fsdp, kv_spec, None), scale=scale)
+    pb.add(f"{prefix}.wo", (layers, dims.q_heads, dims.head_dim, d_model),
+           (None, m, None, fsdp), scale=(dims.q_heads * dims.head_dim) ** -0.5)
+    if qk_norm:
+        pb.ones(f"{prefix}.q_norm", (layers, dims.head_dim), (None, None))
+        pb.ones(f"{prefix}.k_norm", (layers, dims.head_dim), (None, None))
+
+
+def _select_kv_group(ctx: common.ShardCtx, k, v, dims: AttnDims):
+    """When kv is replicated (kv < tp), pick this shard's kv group so local
+    q-heads attend to their own kv head(s)."""
+    if not dims.kv_replicated or ctx.tp == 1:
+        return k, v, (dims.kv_heads if dims.kv_replicated else dims.kv_local)
+    # kv < tp: kv projections are computed replicated; each shard keeps only
+    # the kv head its q-head block attends to.  Requires tp % kv_heads == 0
+    # so a shard's q block lies within one kv group.
+    assert ctx.tp % dims.kv_heads == 0, (ctx.tp, dims.kv_heads)
+    group_size = dims.q_heads // dims.kv_heads
+    first_q = ctx.model_rank() * dims.q_local
+    kv_start = first_q // group_size
+    k = jax.lax.dynamic_slice_in_dim(k, kv_start, 1, axis=2)
+    v = jax.lax.dynamic_slice_in_dim(v, kv_start, 1, axis=2)
+    return k, v, 1
+
+
+def project_qkv(ctx, p, x_full, dims: AttnDims, qk_norm: bool, positions,
+                rope_theta: Optional[float]):
+    """x_full: (B, S, D) -> q (B,S,ql,hd), k/v (B,S,kv_keep,hd) local."""
+    cd = ctx.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x_full, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x_full, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x_full, p["wv"].astype(cd))
+    if qk_norm:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    if rope_theta is not None:
+        q = common.apply_rope(q, positions, rope_theta)
+        k = common.apply_rope(k, positions, rope_theta)
+    k, v, _ = _select_kv_group(ctx, k, v, dims)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: Optional[int] = None,
+                      q_offset=0, chunk_q: int = 1024, chunk_k: int = 1024,
+                      bidirectional_len: Optional[int] = None):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Sk, Hkv, hd) with Hq % Hkv == 0.
+    Returns (B, Sq, Hq, hd).  f32 accumulation, bf16 matmul inputs.
+    ``window``: sliding-window (SWA) width — key positions ≤ q_pos − window
+    are masked.  ``q_offset``: global position of q[0] (decode).
+    """
+    b, sq, hq, hd = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    chunk_q = min(chunk_q, sq)
+    chunk_k = min(chunk_k, sk)
+    nq, nk = sq // chunk_q, sk // chunk_k
+    assert sq % chunk_q == 0 and sk % chunk_k == 0, (sq, sk, chunk_q, chunk_k)
+
+    qr = q.reshape(b, nq, chunk_q, hkv, g, hd)
+    kr = k.reshape(b, nk, chunk_k, hkv, hd)
+    vr = v.reshape(b, nk, chunk_k, hkv, hd)
+    scale = hd ** -0.5
+
+    def q_block(args):
+        qi, qc = args  # index, (b, chunk_q, hkv, g, hd)
+        q_pos = q_offset + qi * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, kc, vc = kv
+            k_pos = ki * chunk_k + jnp.arange(chunk_k)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.ones((chunk_q, chunk_k), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, chunk_q, hd), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (b, hkv, g, chunk_q, hd)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qr, 1, 0)))
+    # (nq, b, hkv, g, chunk_q, hd) -> (b, sq, hq, hd)
+    outs = jnp.moveaxis(outs, 0, 3)            # b hkv g nq cq hd
+    outs = outs.reshape(b, hkv, g, sq, hd)
+    outs = jnp.transpose(outs, (0, 3, 1, 2, 4)).reshape(b, sq, hq, hd)
+    return outs.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: Optional[int] = None):
+    """Single-token attention against a cache.
+
+    q: (B, 1, Hq, hd); caches: (B, Smax, Hkv, hd); pos: () current length
+    (number of valid cache entries).  Returns (B, 1, Hq, hd).
+    """
+    b, _, hq, hd = q.shape
+    _, smax, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qr = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    k_pos = jnp.arange(smax)
+    mask = k_pos[None] < pos
+    if window is not None:
+        mask &= k_pos[None] > pos - 1 - window
+    s = jnp.where(mask[:, None, None, :] if mask.ndim == 2 else mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def output_proj(ctx, p, attn_out):
+    """(B, S, Hq_local, hd) -> partial (B, S, D), then scatter_seq sums TP."""
+    return jnp.einsum("bshk,hkd->bsd", attn_out, p["wo"].astype(ctx.compute_dtype))

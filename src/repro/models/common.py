@@ -1,0 +1,235 @@
+"""Shared model substrate: shard context, collective helpers, init, norms, rope.
+
+Design (DESIGN.md §4): all model code is written *per-shard* and executed
+inside ``jax.shard_map`` with every mesh axis manual.  Tensor parallelism is
+Megatron-style manual collectives over the ``model`` axis with
+sequence-parallel residual streams; data/pod axes only appear in gradient
+synchronization (repro.train) and FSDP parameter gathers.  The same code
+runs on a (1, 1) mesh for CPU smoke tests.
+
+Param bookkeeping: every initializer returns ``(params, specs)`` where specs
+mirror params with a tuple of mesh-axis names per dim (None = replicated).
+Specs drive shard_map in_specs, FSDP gathers, checkpoint resharding and the
+gradient-sync rule (sync axes = mesh axes absent from the leaf's spec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------- #
+# Shard context.
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Static sharding context threaded through all layers.
+
+    tp:  size of the model axis used for tensor parallelism (1 = no TP —
+         e.g. mamba2-130m folds the model axis into data parallelism).
+    fsdp: whether weight leaves marked with the data axis are
+         gathered/scattered per layer (ZeRO-3).
+    """
+
+    model_axis: str = "model"
+    data_axes: Tuple[str, ...] = ("data",)
+    tp: int = 1
+    fsdp: bool = False
+    fsdp_axis: str = "data"
+    compute_dtype: Any = jnp.bfloat16
+    # sequence parallelism for the residual stream (requires S % tp == 0)
+    seq_shard: bool = True
+
+    # ---- collectives (static no-ops when tp == 1) ------------------------ #
+    def psum_model(self, x):
+        return jax.lax.psum(x, self.model_axis) if self.tp > 1 else x
+
+    def pmax_model(self, x):
+        """Cross-shard max, differentiable (lax.pmax has no JVP rule; the
+        gather+max form costs tp small buffers and transposes cleanly —
+        used by the vocab-parallel CE's stability shift)."""
+        if self.tp == 1:
+            return x
+        g = jax.lax.all_gather(x, self.model_axis)
+        return jnp.max(g, axis=0)
+
+    def model_rank(self):
+        return jax.lax.axis_index(self.model_axis) if self.tp > 1 else jnp.int32(0)
+
+    def gather_seq(self, x):
+        """(B, S/tp, D) sequence-sharded -> (B, S, D) replicated-over-model."""
+        if self.tp == 1 or not self.seq_shard:
+            return x
+        return jax.lax.all_gather(x, self.model_axis, axis=1, tiled=True)
+
+    def scatter_seq(self, x):
+        """(B, S, D) per-shard partial sums -> (B, S/tp, D), summed.
+
+        The reverse-mode transpose of gather_seq; fusing the TP reduction
+        with the sequence scatter (Megatron sequence parallelism).
+        """
+        if self.tp == 1 or not self.seq_shard:
+            return x
+        return jax.lax.psum_scatter(x, self.model_axis, scatter_dimension=1,
+                                    tiled=True)
+
+    def gather_heads(self, x, axis):
+        if self.tp == 1:
+            return x
+        return jax.lax.all_gather(x, self.model_axis, axis=axis, tiled=True)
+
+    def slice_seq(self, x, axis=1):
+        """Take this shard's S/tp slice of a replicated sequence tensor."""
+        if self.tp == 1 or not self.seq_shard:
+            return x
+        s_loc = x.shape[axis] // self.tp
+        return jax.lax.dynamic_slice_in_dim(
+            x, self.model_rank() * s_loc, s_loc, axis=axis)
+
+
+def gather_fsdp(layer_params: Dict[str, Any], layer_specs: Dict[str, Any],
+                ctx: ShardCtx):
+    """all_gather FSDP-sharded leaves of one layer's params (ZeRO-3).
+
+    Reverse mode turns each gather into a psum_scatter over the data axis —
+    i.e. the gradient reduce-scatter of FSDP comes out of autodiff for free,
+    and it is *exact* (in-pod ICI; the paper's compression is applied on the
+    pod axis / non-FSDP leaves — DESIGN.md §2).
+    Also casts to the compute dtype.
+    """
+    def one(w, spec):
+        if ctx.fsdp and spec is not None and ctx.fsdp_axis in spec:
+            dim = spec.index(ctx.fsdp_axis)
+            # cast BEFORE the gather: ships bf16, not the f32 master —
+            # halves FSDP weight-gather wire; the transpose reduce-scatters
+            # bf16 cotangents (standard Megatron/FSDP practice).
+            w = jax.lax.all_gather(w.astype(ctx.compute_dtype), ctx.fsdp_axis,
+                                   axis=dim, tiled=True)
+        return w.astype(ctx.compute_dtype)
+
+    return jax.tree.map(one, layer_params, layer_specs,
+                        is_leaf=lambda x: x is None)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter initialization helpers.
+# --------------------------------------------------------------------------- #
+
+def ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+class ParamBuilder:
+    """Accumulates (params, specs) with seeded normal init.
+
+    Arrays are created at LOCAL (per-shard) shape directly — global shape
+    divided by the mesh extent on sharded dims — so initialization never
+    materializes a full 123B-parameter tensor on one host.  Seeds fold in
+    the model-axis rank for sharded dims, keeping init deterministic and
+    mesh-independent per logical slice.
+    """
+
+    def __init__(self, key, ctx: ShardCtx, mesh_sizes: Dict[str, int],
+                 abstract: bool = False):
+        """abstract=True records specs + global ShapeDtypeStructs without
+        touching device state (usable outside shard_map; drives shard_map
+        in/out_specs, dry-run param counting, checkpoint manifests)."""
+        self.key = key
+        self.ctx = ctx
+        self.mesh_sizes = dict(mesh_sizes)
+        self.abstract = abstract
+        self.params: Dict[str, Any] = {}
+        self.specs: Dict[str, Any] = {}
+        self._i = 0
+
+    def _next_key(self):
+        self._i += 1
+        return jax.random.fold_in(self.key, self._i)
+
+    def local_shape(self, shape, spec):
+        out = []
+        for s, ax in zip(shape, spec):
+            if ax is None:
+                out.append(s)
+            else:
+                axes = (ax,) if isinstance(ax, str) else ax
+                div = 1
+                for a in axes:
+                    div *= self.mesh_sizes.get(a, 1)
+                assert s % div == 0, (s, ax, div)
+                out.append(s // div)
+        return tuple(out)
+
+    def add(self, name, shape, spec, scale=None, dtype=jnp.float32, zero=False):
+        """Add a param with GLOBAL shape `shape` and per-dim spec."""
+        assert len(spec) == len(shape), (name, shape, spec)
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(tuple(shape), dtype)
+            self.specs[name] = tuple(spec)
+            return None
+        lshape = self.local_shape(shape, spec)
+        if zero:
+            arr = jnp.zeros(lshape, dtype)
+        else:
+            if scale is None:
+                scale = shape[0] ** -0.5 if len(shape) > 1 else 0.02
+            k = self._next_key()
+            # fold shard identity so different shards draw different slices
+            if self.ctx.tp > 1 and any(s is not None for s in spec):
+                k = jax.random.fold_in(k, self.ctx.model_rank())
+            arr = (jax.random.normal(k, lshape, jnp.float32) * scale).astype(dtype)
+        self.params[name] = arr
+        self.specs[name] = tuple(spec)
+        return arr
+
+    def ones(self, name, shape, spec):
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+            self.specs[name] = tuple(spec)
+            return
+        lshape = self.local_shape(shape, spec)
+        self.params[name] = jnp.ones(lshape, jnp.float32)
+        self.specs[name] = tuple(spec)
+
+
+# --------------------------------------------------------------------------- #
+# Normalization / positional encodings.
+# --------------------------------------------------------------------------- #
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """RMSNorm in f32, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)          # (hd/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, hd/2)
+        ang = ang[None, :, None, :]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d_model: int, offset=0):
+    pos = jnp.arange(length, dtype=jnp.float32) + offset
+    inv = 1e4 ** (-jnp.arange(0, d_model, 2, dtype=jnp.float32) / d_model)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

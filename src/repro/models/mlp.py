@@ -1,0 +1,29 @@
+"""Dense MLP blocks: SwiGLU (llama-family) and GELU (whisper) — TP over d_ff."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+def init_mlp(pb: common.ParamBuilder, prefix: str, layers: int, d_model: int,
+             d_ff: int, fsdp, gated: bool = True):
+    m = "model"
+    pb.add(f"{prefix}.w_up", (layers, d_model, d_ff), (None, fsdp, m))
+    if gated:
+        pb.add(f"{prefix}.w_gate", (layers, d_model, d_ff), (None, fsdp, m))
+    pb.add(f"{prefix}.w_down", (layers, d_ff, d_model),
+           (None, m, fsdp), scale=d_ff ** -0.5)
+
+
+def mlp(ctx: common.ShardCtx, p, x_full, gated: bool = True):
+    """x_full: (B, S, D) -> partial (B, S, D); caller scatter_seq's."""
+    cd = ctx.compute_dtype
+    up = jnp.einsum("bsd,df->bsf", x_full, p["w_up"].astype(cd))
+    if gated:
+        gate = jnp.einsum("bsd,df->bsf", x_full, p["w_gate"].astype(cd))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))

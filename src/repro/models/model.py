@@ -1,0 +1,404 @@
+"""Model facade: per-shard train-loss, prefill and decode drivers for all
+families.  Every function here executes inside shard_map (all axes manual);
+repro.train / repro.serving / repro.launch wrap them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import attention as attn_lib
+from repro.models import common
+from repro.models import encdec as encdec_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.common import ShardCtx
+from repro.models.transformer import sub
+
+
+def make_ctx(cfg: ArchConfig, run: RunConfig, mesh_sizes: Dict[str, int],
+             dtype=jnp.bfloat16) -> ShardCtx:
+    tp = mesh_sizes.get("model", 1) if run.model_parallel else 1
+    return ShardCtx(tp=tp, fsdp=run.fsdp, compute_dtype=dtype,
+                    seq_shard=run.seq_shard and tp > 1)
+
+
+def init(key, cfg: ArchConfig, ctx: ShardCtx, mesh_sizes, run: RunConfig,
+         abstract: bool = False):
+    if cfg.family == "encdec":
+        return encdec_lib.init_encdec(key, cfg, ctx, mesh_sizes, run, abstract)
+    return tfm.init_lm(key, cfg, ctx, mesh_sizes, run, abstract)
+
+
+# --------------------------------------------------------------------------- #
+# Input embedding per family (returns sequence-sharded activations).
+# --------------------------------------------------------------------------- #
+
+def embed_inputs(ctx: ShardCtx, params, cfg: ArchConfig, batch):
+    if cfg.family == "vlm":
+        text = tfm.embed_tokens(ctx, params, cfg, batch["tokens"])
+        patches = batch["patches"].astype(ctx.compute_dtype)
+        patches = jnp.einsum("bpd,de->bpe", patches,
+                             params["patch_proj"].astype(ctx.compute_dtype))
+        # prepend patches, then re-shard the combined stream over seq
+        text_full = ctx.gather_seq(text)
+        x = jnp.concatenate([patches, text_full], axis=1)
+        return ctx.slice_seq(x)
+    return tfm.embed_tokens(ctx, params, cfg, batch["tokens"])
+
+
+def _labels_local(ctx: ShardCtx, cfg: ArchConfig, batch, s_total: int):
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    if cfg.family == "vlm":
+        # patch positions carry no labels
+        b = labels.shape[0]
+        pad_lab = jnp.zeros((b, cfg.num_patches), labels.dtype)
+        pad_mask = jnp.zeros((b, cfg.num_patches), jnp.float32)
+        labels = jnp.concatenate([pad_lab, labels], axis=1)
+        mask = jnp.concatenate([pad_mask, mask.astype(jnp.float32)], axis=1)
+    return ctx.slice_seq(labels), ctx.slice_seq(mask)
+
+
+# --------------------------------------------------------------------------- #
+# Train loss (per shard: local token-loss sum / global count).
+# --------------------------------------------------------------------------- #
+
+def train_loss(ctx: ShardCtx, params, specs, cfg: ArchConfig, run: RunConfig,
+               batch, global_token_count: float):
+    """Returns (loss, metrics).  loss = local CE sum / global count + aux, so
+    that psum(grad) over all axes assembles the true global gradient."""
+    if cfg.family == "encdec":
+        return encdec_lib.train_loss(ctx, params, specs, cfg, run, batch,
+                                     global_token_count)
+    x = embed_inputs(ctx, params, cfg, batch)
+    s_total = (batch["tokens"].shape[1] + cfg.num_patches
+               if cfg.family == "vlm" else batch["tokens"].shape[1])
+    positions = jnp.arange(s_total)
+    h, aux, _ = tfm.forward(ctx, params, specs, cfg, run, x, positions)
+    labels, mask = _labels_local(ctx, cfg, batch, s_total)
+    ce_sum, cnt = tfm.vocab_parallel_ce(ctx, params, cfg, h, labels, mask)
+    loss = ce_sum / global_token_count + aux / jnp.asarray(
+        max(1, cfg.num_layers), jnp.float32)
+    metrics = {"ce_sum": ce_sum, "count": cnt, "aux": aux}
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Decode caches.
+# --------------------------------------------------------------------------- #
+
+def make_cache(ctx: ShardCtx, cfg: ArchConfig, b_local: int, s_max: int,
+               dtype=jnp.bfloat16):
+    """Allocate (or shape-spec) the decode cache pytree."""
+    dims = attn_lib.attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.hd, ctx.tp)
+    kv_keep = 1 if (dims.kv_replicated and ctx.tp > 1) else dims.kv_local
+    if cfg.window is not None:
+        s_max = min(s_max, cfg.window)
+
+    def attn_cache(n):
+        return {"k": jnp.zeros((n, b_local, s_max, kv_keep, cfg.hd), dtype),
+                "v": jnp.zeros((n, b_local, s_max, kv_keep, cfg.hd), dtype)}
+
+    def ssm_cache(n, scfg: ssm_lib.SSMCfg):
+        d_in_loc = scfg.d_inner(cfg.d_model) // max(ctx.tp, 1)
+        nh_loc = scfg.nheads(cfg.d_model) // max(ctx.tp, 1)
+        gn = scfg.n_groups * scfg.d_state
+        w = scfg.conv_width - 1
+        return {
+            "conv_x": jnp.zeros((n, b_local, w, d_in_loc), dtype),
+            "conv_B": jnp.zeros((n, b_local, w, gn), dtype),
+            "conv_C": jnp.zeros((n, b_local, w, gn), dtype),
+            "state": jnp.zeros((n, b_local, nh_loc, scfg.head_dim,
+                                scfg.d_state), jnp.float32),
+        }
+
+    L = cfg.num_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        return attn_cache(L)
+    if cfg.family == "ssm":
+        return ssm_cache(L, cfg.ssm)
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        np_ = L // per
+        return {"attn": attn_cache(np_),
+                "ssm": ssm_cache(np_ * (per - 1), cfg.ssm)}
+    if cfg.family == "encdec":
+        return encdec_lib.make_cache(ctx, cfg, b_local, s_max, dtype)
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------- #
+# Decode step (one token; positions advance by `pos`).
+# --------------------------------------------------------------------------- #
+
+def _attn_decode_layer(ctx, cfg, p, x, kcs, vcs, li, pos, dims):
+    """In-place decode attention.  kcs/vcs: the FULL stacked cache
+    (L, B, S, kv, hd) carried through the layer scan; only the new token's
+    slot is written (dynamic_update_slice on the carry aliases in place —
+    no cache-sized temporaries; see EXPERIMENTS.md §Perf decode entry)."""
+    h = common.rms_norm(x, p["norm1"])
+    q, k, v = attn_lib.project_qkv(ctx, sub(p, "attn"), h, dims, cfg.qk_norm,
+                                   jnp.full((1,), pos), cfg.rope_theta)
+    write = pos if cfg.window is None else pos % kcs.shape[2]
+    zero = jnp.int32(0)
+    kcs = jax.lax.dynamic_update_slice(
+        kcs, k.astype(kcs.dtype)[None], (li, zero, write, zero, zero))
+    vcs = jax.lax.dynamic_update_slice(
+        vcs, v.astype(vcs.dtype)[None], (li, zero, write, zero, zero))
+    kc = jax.lax.dynamic_index_in_dim(kcs, li, 0, keepdims=False)
+    vc = jax.lax.dynamic_index_in_dim(vcs, li, 0, keepdims=False)
+    if cfg.window is None:
+        o = attn_lib.decode_attention(q, kc, vc, pos + 1)
+    else:
+        # ring buffer: all slots valid once full; relative order is immaterial
+        # to softmax except rope phases already baked into k.
+        valid = jnp.minimum(pos + 1, kcs.shape[2])
+        o = attn_lib.decode_attention(q, kc, vc, valid)
+    o = attn_lib.output_proj(ctx, sub(p, "attn"), o)
+    return x + ctx.psum_model(o), kcs, vcs
+
+
+def _ffn_decode(ctx, cfg, p, x, kind):
+    h = common.rms_norm(x, p["norm2"])
+    if kind == "mlp":
+        from repro.models import mlp as mlp_lib
+        return x + ctx.psum_model(mlp_lib.mlp(ctx, sub(p, "mlp"), h))
+    return x + moe_lib.moe_decode(ctx, sub(p, "moe"), h, cfg.moe)
+
+
+def decode_step(ctx: ShardCtx, params, specs, cfg: ArchConfig, run: RunConfig,
+                cache, tok, pos):
+    """tok: (B, 1) int32; pos: () int32 current length.  Returns
+    (next_token (B, 1), logits_local (B, 1, V_loc), new_cache)."""
+    if cfg.family == "encdec":
+        return encdec_lib.decode_step(ctx, params, specs, cfg, run, cache,
+                                      tok, pos)
+    ctx = dataclasses.replace(ctx, seq_shard=False)
+    dims = attn_lib.attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.hd, ctx.tp)
+    x = tfm.embed_tokens(ctx, params, cfg, tok)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        lp = sub(params, "layers")
+        ls = sub(specs, "layers")
+
+        def body(carry, layer):
+            x, kcs, vcs, li = carry
+            layer = common.gather_fsdp(layer, {k: v[1:] for k, v in ls.items()},
+                                       ctx)
+            x, kcs, vcs = _attn_decode_layer(ctx, cfg, layer, x, kcs, vcs, li,
+                                             pos, dims)
+            x = _ffn_decode(ctx, cfg, layer, x,
+                            "moe" if cfg.family == "moe" else "mlp")
+            return (x, kcs, vcs, li + 1), None
+
+        (x, kcs, vcs, _), _ = jax.lax.scan(
+            body, (x, cache["k"], cache["v"], jnp.int32(0)), lp)
+        new_cache = {"k": kcs, "v": vcs}
+    elif cfg.family == "ssm":
+        lp = sub(params, "layers")
+        ls = sub(specs, "layers")
+
+        def body(carry, layer):
+            x, cxs, cbs, ccs, sts, li = carry
+            layer = common.gather_fsdp(layer, {k: v[1:] for k, v in ls.items()},
+                                       ctx)
+            h = common.rms_norm(x, layer["norm1"])
+            idx = lambda buf: jax.lax.dynamic_index_in_dim(buf, li, 0, False)
+            out, ((cx2, cb2, cc2), st2) = _mamba_decode_unpack(
+                ctx, sub(layer, "ssm"), h, cfg.ssm,
+                idx(cxs), idx(cbs), idx(ccs), idx(sts))
+            wr = lambda buf, v: jax.lax.dynamic_update_index_in_dim(
+                buf, v.astype(buf.dtype), li, 0)
+            return (x + ctx.psum_model(out), wr(cxs, cx2), wr(cbs, cb2),
+                    wr(ccs, cc2), wr(sts, st2), li + 1), None
+
+        (x, cxs, cbs, ccs, sts, _), _ = jax.lax.scan(
+            body, (x, cache["conv_x"], cache["conv_B"], cache["conv_C"],
+                   cache["state"], jnp.int32(0)), lp)
+        new_cache = {"conv_x": cxs, "conv_B": cbs, "conv_C": ccs, "state": sts}
+    elif cfg.family == "hybrid":
+        x, new_cache = _decode_hybrid(ctx, params, specs, cfg, run, cache, x,
+                                      pos, dims)
+    else:
+        raise ValueError(cfg.family)
+
+    h = common.rms_norm(x, params["final_norm"])
+    logits = tfm.lm_head_logits(ctx, params, cfg, h)
+    nxt = tfm.greedy_sample(ctx, logits)
+    return nxt, logits, new_cache
+
+
+def _mamba_decode_unpack(ctx, p, h, scfg, cx, cb, cc, st):
+    out, (conv, st2) = ssm_lib.mamba_decode(
+        ctx, p, h, scfg, {"x": cx, "B": cb, "C": cc}, st)
+    return out, ((conv["x"], conv["B"], conv["C"]), st2)
+
+
+def _decode_hybrid(ctx, params, specs, cfg, run, cache, x, pos, dims):
+    per = cfg.attn_every
+    np_ = cfg.num_layers // per
+    nm = per - 1
+    n_moe = per // cfg.moe.every_n
+    pp = sub(params, "periods")
+    ps = sub(specs, "periods")
+
+    def reshape_stack(d, n_inner):
+        return {k: v.reshape((np_, n_inner) + v.shape[1:]) for k, v in d.items()}
+
+    stacked = {}
+    stacked.update({f"attn.{k}": v for k, v in sub(pp, "attn").items()})
+    stacked.update({f"ssm.{k}": v for k, v in
+                    reshape_stack(sub(pp, "ssm"), nm).items()})
+    stacked.update({f"moe.{k}": v for k, v in
+                    reshape_stack(sub(pp, "moe"), n_moe).items()})
+    stacked.update({f"mlp.{k}": v for k, v in
+                    reshape_stack(sub(pp, "mlp"), per - n_moe).items()})
+    stacked["norm1"] = pp["norm1"].reshape(np_, per, -1)
+    stacked["norm2"] = pp["norm2"].reshape(np_, per, -1)
+
+    def _g(period, group, idx=None):
+        pl = sub(period, group)
+        if idx is not None:
+            pl = {k: v[idx] for k, v in pl.items()}
+        return common.gather_fsdp(pl, {k: ps[f"{group}.{k}"][1:] for k in pl},
+                                  ctx)
+
+    a_cache = cache["attn"]
+    s_cache = cache["ssm"]
+
+    def body(carry, period):
+        x, kcs, vcs, cxs, cbs, ccs, sts, pi = carry
+        mi = fi_moe = fi_mlp = 0
+        for i in range(per):
+            pl = {"norm1": period["norm1"][i], "norm2": period["norm2"][i]}
+            if i == cfg.attn_offset:
+                pl.update({f"attn.{k}": v for k, v in _g(period, "attn").items()})
+                x, kcs, vcs = _attn_decode_layer(ctx, cfg, pl, x, kcs, vcs,
+                                                 pi, pos, dims)
+            else:
+                pssm = _g(period, "ssm", mi)
+                h = common.rms_norm(x, pl["norm1"])
+                si = pi * nm + mi
+                idx = lambda buf: jax.lax.dynamic_index_in_dim(buf, si, 0, False)
+                out, ((cx2, cb2, cc2), st2) = _mamba_decode_unpack(
+                    ctx, pssm, h, cfg.ssm, idx(cxs), idx(cbs), idx(ccs),
+                    idx(sts))
+                x = x + ctx.psum_model(out)
+                wr = lambda buf, v: jax.lax.dynamic_update_index_in_dim(
+                    buf, v.astype(buf.dtype), si, 0)
+                cxs, cbs, ccs, sts = (wr(cxs, cx2), wr(cbs, cb2),
+                                      wr(ccs, cc2), wr(sts, st2))
+                mi += 1
+            if n_moe > 0 and i % cfg.moe.every_n == 1 % cfg.moe.every_n:
+                pl2 = {"norm2": period["norm2"][i]}
+                pl2.update({f"moe.{k}": v for k, v in
+                            _g(period, "moe", fi_moe).items()})
+                x = _ffn_decode(ctx, cfg, pl2, x, "moe")
+                fi_moe += 1
+            else:
+                pl2 = {"norm2": period["norm2"][i]}
+                pl2.update({f"mlp.{k}": v for k, v in
+                            _g(period, "mlp", fi_mlp).items()})
+                x = _ffn_decode(ctx, cfg, pl2, x, "mlp")
+                fi_mlp += 1
+        return (x, kcs, vcs, cxs, cbs, ccs, sts, pi + 1), None
+
+    (x, kcs, vcs, cxs, cbs, ccs, sts, _), _ = jax.lax.scan(
+        body, (x, a_cache["k"], a_cache["v"], s_cache["conv_x"],
+               s_cache["conv_B"], s_cache["conv_C"], s_cache["state"],
+               jnp.int32(0)), stacked)
+    new_cache = {
+        "attn": {"k": kcs, "v": vcs},
+        "ssm": {"conv_x": cxs, "conv_B": cbs, "conv_C": ccs, "state": sts},
+    }
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Prefill: forward with cache capture, then assemble decode-ready caches.
+# --------------------------------------------------------------------------- #
+
+def prefill(ctx: ShardCtx, params, specs, cfg: ArchConfig, run: RunConfig,
+            batch, s_max: Optional[int] = None):
+    """Run the prompt through the model, return (cache, logits_last (B,1,V_loc)).
+
+    The attention caches hold the prompt's K/V (padded to s_max when given);
+    SSM caches hold the final conv window + state.
+    """
+    if cfg.family == "encdec":
+        return encdec_lib.prefill(ctx, params, specs, cfg, run, batch, s_max)
+    x = embed_inputs(ctx, params, cfg, batch)
+    s_total = (batch["tokens"].shape[1] + cfg.num_patches
+               if cfg.family == "vlm" else batch["tokens"].shape[1])
+    positions = jnp.arange(s_total)
+    h, _, caches = tfm.forward(ctx, params, specs, cfg, run, x, positions,
+                               want_cache=True)
+    # last-token logits: last shard holds the final S/tp slice
+    h_full = ctx.gather_seq(h)
+    logits = tfm.lm_head_logits(ctx, params, cfg, h_full[:, -1:])
+
+    def pad_to(x, n, axis):
+        if s_max is None or x.shape[axis] >= n:
+            return x
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, n - x.shape[axis])
+        return jnp.pad(x, pad)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        k, v = caches
+        cache = {"k": pad_to(k.astype(jnp.bfloat16), s_max or k.shape[2], 2),
+                 "v": pad_to(v.astype(jnp.bfloat16), s_max or v.shape[2], 2)}
+    elif cfg.family == "ssm":
+        conv, st = caches
+        cache = {"conv_x": conv["x"].astype(jnp.bfloat16),
+                 "conv_B": conv["B"].astype(jnp.bfloat16),
+                 "conv_C": conv["C"].astype(jnp.bfloat16),
+                 "state": st}
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        np_ = cfg.num_layers // per
+        nm = per - 1
+        # caches: tuple over period positions; one attn kv + nm ssm states
+        attn_k, attn_v, cxs, cbs, ccs, sts = _regroup_hybrid_caches(
+            caches, cfg)
+        cache = {"attn": {"k": pad_to(attn_k.astype(jnp.bfloat16),
+                                      s_max or attn_k.shape[2], 2),
+                          "v": pad_to(attn_v.astype(jnp.bfloat16),
+                                      s_max or attn_v.shape[2], 2)},
+                 "ssm": {"conv_x": cxs.astype(jnp.bfloat16),
+                         "conv_B": cbs.astype(jnp.bfloat16),
+                         "conv_C": ccs.astype(jnp.bfloat16),
+                         "state": sts}}
+    else:
+        raise ValueError(cfg.family)
+    return cache, logits
+
+
+def _regroup_hybrid_caches(caches, cfg: ArchConfig):
+    """forward(hybrid) ys: tuple over intra-period slots, each stacked over
+    periods.  Slot attn_offset is (k, v); the rest are ((convs), state)."""
+    per = cfg.attn_every
+    ks = vs = None
+    cx, cb, cc, st = [], [], [], []
+    for i, c in enumerate(caches):
+        if i == cfg.attn_offset:
+            ks, vs = c
+        else:
+            conv, s = c
+            cx.append(conv["x"])
+            cb.append(conv["B"])
+            cc.append(conv["C"])
+            st.append(s)
+    # each list entry: (np_, B, ...) stacked over periods; want (np_*nm, ...)
+    def pack(lst):
+        arr = jnp.stack(lst, axis=1)  # (np_, nm, ...)
+        return arr.reshape((-1,) + arr.shape[2:])
+    return ks, vs, pack(cx), pack(cb), pack(cc), pack(st)

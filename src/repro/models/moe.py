@@ -1,0 +1,182 @@
+"""Expert-parallel Mixture-of-Experts with all_to_all dispatch (GShard-style).
+
+Experts are sharded over the model axis (EP).  Each shard routes its own
+sequence slice's tokens, packs them into per-expert capacity slots, and an
+all_to_all ships slots to the owning shard; expert FFNs run as one batched
+einsum over local experts; a second all_to_all returns outputs, combined
+with router weights.  Non-divisible expert counts (qwen2-moe's 60) are
+padded to a tp multiple with inert experts (router logits masked to −inf;
+DESIGN.md §4).
+
+Shared experts (qwen2-moe) are a plain dense TP MLP added to the output.
+An auxiliary load-balance loss (Switch-style) is returned for training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models import mlp as mlp_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int          # routed experts (pre-padding)
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0       # shared-expert copies (qwen2-moe: 4 → one MLP
+    d_ff_shared: int = 0      # with d_ff_shared = 4·1408 = 5632)
+    capacity_factor: float = 1.25
+    every_n: int = 1          # MoE layer cadence (jamba: 2)
+    router_aux_weight: float = 0.01
+
+    def padded(self, tp: int) -> int:
+        return common.ceil_to(self.num_experts, tp)
+
+
+def init_moe(pb: common.ParamBuilder, prefix: str, layers: int, d_model: int,
+             cfg: MoECfg, tp: int, fsdp):
+    m = "model"
+    ep = cfg.padded(tp)
+    pb.add(f"{prefix}.router", (layers, d_model, ep), (None, None, None),
+           scale=0.02)
+    pb.add(f"{prefix}.w_up", (layers, ep, d_model, cfg.d_ff_expert),
+           (None, m, fsdp, None))
+    pb.add(f"{prefix}.w_gate", (layers, ep, d_model, cfg.d_ff_expert),
+           (None, m, fsdp, None))
+    pb.add(f"{prefix}.w_down", (layers, ep, cfg.d_ff_expert, d_model),
+           (None, m, None, fsdp), scale=cfg.d_ff_expert ** -0.5)
+    if cfg.num_shared:
+        mlp_lib.init_mlp(pb, f"{prefix}.shared", layers, d_model,
+                         cfg.d_ff_shared, fsdp)
+
+
+def moe_block(ctx: common.ShardCtx, p, x_seq, cfg: MoECfg):
+    """x_seq: (B, S_loc, D) this shard's sequence slice (tokens are already
+    partitioned over the model axis by sequence parallelism — they double as
+    the EP dispatch domain).  Returns (out (B, S_loc, D), aux_loss)."""
+    cd = ctx.compute_dtype
+    b, s_loc, d = x_seq.shape
+    t = b * s_loc
+    ep = cfg.padded(ctx.tp)
+    e_loc = ep // ctx.tp
+    x = x_seq.reshape(t, d)
+
+    # ---- routing (f32) ---------------------------------------------------
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    inert = jnp.arange(ep) >= cfg.num_experts
+    logits = jnp.where(inert[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.top_k)   # (t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style aux loss: E·Σ_e f_e·P_e over real experts.
+    density = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], ep), axis=0)
+    p_mean = jnp.mean(probs, axis=0)
+    aux = cfg.num_experts * jnp.sum(density * p_mean) * cfg.router_aux_weight
+
+    # ---- capacity slotting ------------------------------------------------
+    cap = max(1, int(cfg.capacity_factor * t * cfg.top_k / ep))
+    flat_e = expert_ids.reshape(-1)                          # (t*k,)
+    onehot = jax.nn.one_hot(flat_e, ep, dtype=jnp.int32)     # (t*k, ep)
+    pos = jnp.cumsum(onehot, axis=0) - 1                     # slot per (t,k)
+    slot = jnp.sum(pos * onehot, axis=-1)                    # (t*k,)
+    keep = slot < cap
+    gate_keep = gate_vals.reshape(-1) * keep
+
+    # dispatch buffer (ep, cap, d)
+    send = jnp.zeros((ep, cap, d), cd)
+    tok_idx = jnp.repeat(jnp.arange(t), cfg.top_k)
+    send = send.at[flat_e, jnp.clip(slot, 0, cap - 1)].add(
+        jnp.where(keep[:, None], x.astype(cd)[tok_idx], 0))
+
+    # ---- EP all_to_all ----------------------------------------------------
+    if ctx.tp > 1:
+        send = send.reshape(ctx.tp, e_loc, cap, d)
+        recv = jax.lax.all_to_all(send, ctx.model_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+        # (tp, e_loc, cap, d): axis 0 is now the source shard.
+        recv = jnp.moveaxis(recv, 0, 1).reshape(e_loc, ctx.tp * cap, d)
+    else:
+        recv = send.reshape(e_loc, cap, d)
+
+    # ---- expert FFN (batched over local experts) --------------------------
+    up = jnp.einsum("ecd,edf->ecf", recv, p["w_up"].astype(cd))
+    gate = jnp.einsum("ecd,edf->ecf", recv, p["w_gate"].astype(cd))
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(cd))
+
+    # ---- return trip ------------------------------------------------------
+    if ctx.tp > 1:
+        out = out.reshape(e_loc, ctx.tp, cap, d)
+        out = jnp.moveaxis(out, 1, 0)                        # (tp, e_loc, cap, d)
+        out = jax.lax.all_to_all(out, ctx.model_axis, split_axis=0,
+                                 concat_axis=0, tiled=False)
+        out = out.reshape(ep, cap, d)
+    else:
+        out = out.reshape(ep, cap, d)
+
+    # ---- combine -----------------------------------------------------------
+    gathered = out[flat_e, jnp.clip(slot, 0, cap - 1)]       # (t*k, d)
+    combined = jnp.sum(
+        (gathered * gate_keep[:, None].astype(cd)).reshape(t, cfg.top_k, d),
+        axis=1)
+
+    y = combined.reshape(b, s_loc, d)
+    if cfg.num_shared:
+        # shared experts are a dense-TP MLP: need the full sequence view
+        shared_in = ctx.gather_seq(x_seq)
+        shared_p = {"w_up": p["shared.w_up"], "w_gate": p["shared.w_gate"],
+                    "w_down": p["shared.w_down"]}
+        y = y + ctx.scatter_seq(mlp_lib.mlp(ctx, shared_p, shared_in))
+    return y, aux
+
+
+def moe_decode(ctx: common.ShardCtx, p, x, cfg: MoECfg):
+    """Decode-time MoE: tokens are replicated over the model axis (no
+    sequence parallelism at T = 1), so instead of an all_to_all round-trip
+    each shard computes its *local* experts densely for all tokens, masked
+    by the router gates, and a single psum combines expert shards.  The
+    redundancy (e_loc× extra FFN flops on a handful of tokens) is noise next
+    to the weight streaming that dominates decode.
+
+    x: (B, 1, D) replicated.  Returns the FFN output, already psum'd.
+    """
+    cd = ctx.compute_dtype
+    b, one, d = x.shape
+    t = b * one
+    ep = cfg.padded(ctx.tp)
+    e_loc = ep // ctx.tp
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    inert = jnp.arange(ep) >= cfg.num_experts
+    logits = jnp.where(inert[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    gmat = jnp.sum(gate_vals[..., None]
+                   * jax.nn.one_hot(expert_ids, ep, dtype=jnp.float32),
+                   axis=1)                                     # (t, ep)
+    off = ctx.model_rank() * e_loc
+    g_loc = jax.lax.dynamic_slice(gmat, (0, off), (t, e_loc))  # (t, e_loc)
+
+    up = jnp.einsum("td,edf->etf", xt, p["w_up"].astype(cd))
+    gate = jnp.einsum("td,edf->etf", xt, p["w_gate"].astype(cd))
+    h = jax.nn.silu(gate) * up
+    oute = jnp.einsum("etf,efd->etd", h, p["w_down"].astype(cd))
+    out = jnp.einsum("te,etd->td", g_loc.astype(cd), oute)
+
+    if cfg.num_shared:
+        shared_p = {"w_up": p["shared.w_up"], "w_gate": p["shared.w_gate"],
+                    "w_down": p["shared.w_down"]}
+        out = out + mlp_lib.mlp(ctx, shared_p, x).reshape(t, d)
+    return ctx.psum_model(out.reshape(b, one, d))

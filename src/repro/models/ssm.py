@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD — state-space duality) layers: chunked train/prefill scan +
+single-token decode recurrence.  TP shards d_inner / heads over the model
+axis (requires nheads % tp == 0; mamba2-130m instead runs with tp = 1 and
+the model axis folded into data parallelism — DESIGN.md §4).
+
+SSD algorithm (Dao & Gu 2024): per head, with state S_t ∈ R^{p×n},
+
+    S_t = a_t·S_{t−1} + Δ_t·X_t ⊗ B_t,      a_t = exp(Δ_t·A) ∈ (0, 1]
+    y_t = S_t·C_t + D·x_t
+
+Chunked evaluation over chunks of Q tokens (cum_t = Σ_{v≤t} log a_v):
+
+    intra:  y_t += Σ_{u≤t} e^{cum_t−cum_u}·Δ_u·(C_t·B_u)·X_u   (masked matmul → MXU)
+    inter:  y_t += e^{cum_t}·S_init·C_t
+    carry:  S' = e^{cum_Q}·S_init + Σ_u e^{cum_Q−cum_u}·Δ_u·X_u ⊗ B_u
+
+All decay math in f32 log-space; masked entries get −inf before exp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1          # B/C groups; this implementation uses shared
+    conv_width: int = 4        # B/C (n_groups = 1), the mamba2-130m setting
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+def init_ssm(pb: common.ParamBuilder, prefix: str, layers: int, d_model: int,
+             cfg: SSMCfg, tp: int, fsdp):
+    m = "model" if tp > 1 else None
+    din = cfg.d_inner(d_model)
+    nh = cfg.nheads(d_model)
+    gn = cfg.n_groups * cfg.d_state
+    if m:
+        assert nh % tp == 0, (nh, tp)
+    pb.add(f"{prefix}.w_z", (layers, d_model, din), (None, fsdp, m))
+    pb.add(f"{prefix}.w_x", (layers, d_model, din), (None, fsdp, m))
+    pb.add(f"{prefix}.w_B", (layers, d_model, gn), (None, fsdp, None))
+    pb.add(f"{prefix}.w_C", (layers, d_model, gn), (None, fsdp, None))
+    pb.add(f"{prefix}.w_dt", (layers, d_model, nh), (None, fsdp, m))
+    pb.add(f"{prefix}.conv_x", (layers, cfg.conv_width, din), (None, None, m),
+           scale=cfg.conv_width ** -0.5)
+    pb.add(f"{prefix}.conv_B", (layers, cfg.conv_width, gn), (None, None, None),
+           scale=cfg.conv_width ** -0.5)
+    pb.add(f"{prefix}.conv_C", (layers, cfg.conv_width, gn), (None, None, None),
+           scale=cfg.conv_width ** -0.5)
+    pb.add(f"{prefix}.A_log", (layers, nh), (None, m), scale=1.0)
+    pb.add(f"{prefix}.D", (layers, nh), (None, m), scale=1.0)
+    pb.add(f"{prefix}.dt_bias", (layers, nh), (None, m), scale=1.0)
+    pb.ones(f"{prefix}.norm", (layers, din), (None, m))
+    pb.add(f"{prefix}.w_out", (layers, din, d_model), (None, m, fsdp),
+           scale=din ** -0.5)
+
+
+def _causal_conv(x, w, state: Optional[jax.Array] = None):
+    """Depthwise causal conv + silu.  x: (B, S, C); w: (W, C).
+
+    Returns (y, new_state); new_state = last W−1 inputs (for decode).
+    """
+    bw = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], bw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :].astype(x.dtype)
+            for i in range(bw))
+    return jax.nn.silu(y), xp[:, -(bw - 1):]
+
+
+def ssd_chunked(X, B, C, dt, log_a, cfg: SSMCfg, init_state=None):
+    """Chunked SSD scan.
+
+    X: (b, s, h, p) — h is this shard's local heads; B, C: (b, s, n) shared
+    across heads (n_groups = 1); dt, log_a: (b, s, h).
+    Returns (Y (b, s, h, p), final_state (b, h, p, n) f32).
+    """
+    b, s, h, hd = X.shape
+    n = B.shape[-1]
+    q = min(cfg.chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    Xc = jnp.moveaxis(X.reshape(b, nc, q, h, hd), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(b, nc, q, n), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(b, nc, q, n), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(b, nc, q, h), 1, 0)
+    lac = jnp.moveaxis(log_a.reshape(b, nc, q, h), 1, 0)
+    mask = jnp.tril(jnp.ones((q, q), bool))  # t ≥ u
+
+    def chunk_step(state, inp):
+        xq, bq, cq, dtq, laq = inp           # (b, q, ...)
+        xqf = xq.astype(jnp.float32)
+        cum = jnp.cumsum(laq, axis=1)        # (b, q, h), ≤ 0, non-increasing
+        total = cum[:, -1]                   # (b, h)
+
+        # intra-chunk masked quadratic form
+        scores = jnp.einsum("btn,bun->btu", cq, bq)             # (b, t, u)
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]         # (b, t, u, h)
+        ldiff = jnp.where(mask[None, :, :, None], ldiff, NEG_INF)
+        m = scores[..., None] * jnp.exp(ldiff) * dtq[:, None, :, :]  # (b,t,u,h)
+        y_intra = jnp.einsum("btuh,buhp->bthp", m, xqf)
+
+        # inter-chunk: carried state
+        y_inter = jnp.einsum("btn,bth,bhpn->bthp",
+                             cq, jnp.exp(cum), state)
+
+        # state carry
+        wgt = jnp.exp(total[:, None, :] - cum) * dtq            # (b, q, h)
+        s_new = (jnp.exp(total)[:, :, None, None] * state
+                 + jnp.einsum("buhp,bun,buh->bhpn", xqf, bq, wgt))
+        return s_new, (y_intra + y_inter).astype(X.dtype)
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((b, h, hd, cfg.d_state), jnp.float32))
+    final, ys = jax.lax.scan(chunk_step, s0, (Xc, Bc, Cc, dtc, lac))
+    Y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, hd)
+    return Y, final
+
+
+def ssd_decode_step(state, x, B, C, dt, log_a):
+    """One-token recurrence.  state: (b, h, p, n) f32; x: (b, h, p);
+    B, C: (b, n); dt, log_a: (b, h).  Returns (y (b, h, p), new_state)."""
+    xf = x.astype(jnp.float32)
+    a = jnp.exp(log_a)                                          # (b, h)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xf, B.astype(jnp.float32), dt)
+    s_new = a[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", s_new, C.astype(jnp.float32))
+    return y.astype(x.dtype), s_new
+
+
+def _split_proj(ctx, p, x_full, cfg: SSMCfg, nh_loc: int):
+    """Input projections (+conv on x/B/C) shared by prefill and train."""
+    cd = ctx.compute_dtype
+    z = jnp.einsum("bsd,de->bse", x_full, p["w_z"].astype(cd))
+    xin = jnp.einsum("bsd,de->bse", x_full, p["w_x"].astype(cd))
+    Braw = jnp.einsum("bsd,dg->bsg", x_full, p["w_B"].astype(cd))
+    Craw = jnp.einsum("bsd,dg->bsg", x_full, p["w_C"].astype(cd))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x_full, p["w_dt"].astype(cd))
+    return z, xin, Braw, Craw, dt_raw
+
+
+def mamba_block(ctx: common.ShardCtx, p, x_seq, cfg: SSMCfg,
+                conv_state=None, ssm_state=None, return_state: bool = False):
+    """Full Mamba-2 block on a sequence (train or prefill).
+
+    x_seq: (B, S/tp, D) sequence-sharded residual slice.
+    Returns out (B, S/tp, D) [, (conv_states, ssm_state)].
+    """
+    x_full = ctx.gather_seq(x_seq)
+    b, s, d = x_full.shape
+    nh_loc = cfg.nheads(d) // (ctx.tp if ctx.tp > 1 else 1)
+    z, xin, Braw, Craw, dt_raw = _split_proj(ctx, p, x_full, cfg, nh_loc)
+
+    cs = conv_state or {}
+    xin, cs_x = _causal_conv(xin, p["conv_x"], cs.get("x"))
+    Braw, cs_b = _causal_conv(Braw, p["conv_B"], cs.get("B"))
+    Craw, cs_c = _causal_conv(Craw, p["conv_C"], cs.get("C"))
+
+    X = xin.reshape(b, s, nh_loc, cfg.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_a = dt * A[None, None, :]
+    Y, final = ssd_chunked(X, Braw.astype(jnp.float32),
+                           Craw.astype(jnp.float32), dt, log_a, cfg,
+                           init_state=ssm_state)
+    Y = Y + X * p["D"].astype(X.dtype)[None, None, :, None]
+    y = Y.reshape(b, s, nh_loc * cfg.head_dim)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(ctx.compute_dtype))
+    out = ctx.scatter_seq(out)
+    if return_state:
+        return out, ({"x": cs_x, "B": cs_b, "C": cs_c}, final)
+    return out
+
+
+def mamba_decode(ctx: common.ShardCtx, p, x_tok, cfg: SSMCfg, conv_state,
+                 ssm_state):
+    """One-token decode.  x_tok: (B, 1, D) replicated over model.
+
+    conv_state: dict of (B, W−1, C) buffers; ssm_state: (B, h_loc, p, n).
+    Returns (out (B, 1, D) partial-sum over model, new_states).
+    """
+    b, _, d = x_tok.shape
+    nh_loc = cfg.nheads(d) // (ctx.tp if ctx.tp > 1 else 1)
+    z, xin, Braw, Craw, dt_raw = _split_proj(ctx, p, x_tok, cfg, nh_loc)
+    xin, cs_x = _causal_conv(xin, p["conv_x"], conv_state["x"])
+    Braw, cs_b = _causal_conv(Braw, p["conv_B"], conv_state["B"])
+    Craw, cs_c = _causal_conv(Craw, p["conv_C"], conv_state["C"])
+    X = xin.reshape(b, nh_loc, cfg.head_dim)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (b, h)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    log_a = dt * A[None, :]
+    y, s_new = ssd_decode_step(ssm_state, X, Braw[:, 0], Craw[:, 0], dt, log_a)
+    y = y + X * p["D"].astype(X.dtype)[None, :, None]
+    y = y.reshape(b, 1, nh_loc * cfg.head_dim)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        p["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(ctx.compute_dtype))
+    return out, ({"x": cs_x, "B": cs_b, "C": cs_c}, s_new)

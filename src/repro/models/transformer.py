@@ -1,0 +1,346 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid / VLM families.
+
+One per-shard code path (inside shard_map, all axes manual) serving train,
+prefill and decode.  Layers are stacked and scanned (hybrids scan over
+periods with a static intra-period structure), keeping HLO size and compile
+time O(1) in depth.  Remat (jax.checkpoint) wraps the scanned body.
+
+Losses: vocab-parallel cross-entropy — logits are never materialized at
+full vocab width; each model shard computes its vocab slice for the full
+token stream in sequence chunks, with max/logsumexp psums over the model
+axis (f32).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import attention as attn_lib
+from repro.models import common
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import ParamBuilder, ShardCtx
+
+
+def sub(p: Dict[str, Any], prefix: str) -> Dict[str, Any]:
+    pl = len(prefix) + 1
+    return {k[pl:]: v for k, v in p.items() if k.startswith(prefix + ".")}
+
+
+def take_layer(p: Dict[str, Any], i) -> Dict[str, Any]:
+    return {k: v[i] for k, v in p.items()}
+
+
+# --------------------------------------------------------------------------- #
+# Init.
+# --------------------------------------------------------------------------- #
+
+def init_lm(key, cfg: ArchConfig, ctx: ShardCtx, mesh_sizes: Dict[str, int],
+            run: RunConfig, abstract: bool = False):
+    """Build (params, specs) for any decoder-only family."""
+    pb = ParamBuilder(key, ctx, mesh_sizes, abstract=abstract)
+    fsdp = ctx.fsdp_axis if run.fsdp else None
+    tp = ctx.tp
+    d = cfg.d_model
+    vp = cfg.vocab_padded(tp)
+    dims = attn_lib.attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.hd, tp)
+
+    vshard = "model" if tp > 1 else None  # no vocab-TP when the model axis
+    pb.add("embed", (vp, d), (vshard, None), scale=0.02)  # is folded into DP
+    if not cfg.tie_embeddings:
+        pb.add("lm_head", (vp, d), (vshard, None), scale=d ** -0.5)
+    pb.ones("final_norm", (d,), (None,))
+
+    L = cfg.num_layers
+    if cfg.family in ("dense", "vlm"):
+        attn_lib.init_attention(pb, "layers.attn", L, d, dims, cfg.qk_norm, fsdp)
+        mlp_lib.init_mlp(pb, "layers.mlp", L, d, cfg.d_ff, fsdp)
+        pb.ones("layers.norm1", (L, d), (None, None))
+        pb.ones("layers.norm2", (L, d), (None, None))
+        if cfg.family == "vlm":
+            pb.add("patch_proj", (d, d), (None, None), scale=d ** -0.5)
+    elif cfg.family == "moe":
+        attn_lib.init_attention(pb, "layers.attn", L, d, dims, cfg.qk_norm, fsdp)
+        moe_lib.init_moe(pb, "layers.moe", L, d, cfg.moe, tp, fsdp)
+        pb.ones("layers.norm1", (L, d), (None, None))
+        pb.ones("layers.norm2", (L, d), (None, None))
+    elif cfg.family == "ssm":
+        ssm_lib.init_ssm(pb, "layers.ssm", L, d, cfg.ssm, tp, fsdp)
+        pb.ones("layers.norm1", (L, d), (None, None))
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        np_ = L // per
+        nm = per - 1                       # mamba mixers per period
+        # attention: one per period
+        attn_lib.init_attention(pb, "periods.attn", np_, d, dims, cfg.qk_norm, fsdp)
+        # mamba: stacked (periods, nm, ...): emulate by init with layers=np_*nm
+        ssm_lib.init_ssm(pb, "periods.ssm", np_ * nm, d, cfg.ssm, tp, fsdp)
+        # ffn: alternate MoE / dense per layer parity
+        n_moe = per // cfg.moe.every_n
+        n_mlp = per - n_moe
+        moe_lib.init_moe(pb, "periods.moe", np_ * n_moe, d, cfg.moe, tp, fsdp)
+        mlp_lib.init_mlp(pb, "periods.mlp", np_ * n_mlp, d, cfg.d_ff, fsdp)
+        pb.ones("periods.norm1", (np_ * per, d), (None, None))
+        pb.ones("periods.norm2", (np_ * per, d), (None, None))
+    else:
+        raise ValueError(cfg.family)
+    return pb.params, pb.specs
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / LM head (vocab-TP).
+# --------------------------------------------------------------------------- #
+
+def embed_tokens(ctx: ShardCtx, params, cfg: ArchConfig, tokens):
+    """tokens (B, S) -> (B, S/tp, D) sequence-sharded embeddings."""
+    vp = cfg.vocab_padded(ctx.tp)
+    v_loc = vp // ctx.tp
+    off = ctx.model_rank() * v_loc
+    ids = tokens - off
+    ok = (ids >= 0) & (ids < v_loc)
+    emb = jnp.take(params["embed"], jnp.clip(ids, 0, v_loc - 1), axis=0)
+    emb = jnp.where(ok[..., None], emb, 0).astype(ctx.compute_dtype)
+    if ctx.tp > 1 and ctx.seq_shard:
+        return jax.lax.psum_scatter(emb, ctx.model_axis, scatter_dimension=1,
+                                    tiled=True)
+    return ctx.psum_model(emb)
+
+
+def vocab_parallel_ce(ctx: ShardCtx, params, cfg: ArchConfig, h_seq, labels_seq,
+                      mask_seq, chunk: int = 512):
+    """Cross-entropy over the vocab-sharded head.
+
+    h_seq: (B, S_loc, D) sequence-sharded final hidden states; labels/mask
+    aligned to the same slice.  Returns (local loss sum f32, local count).
+    Never materializes (tokens × vocab) logits: sequence chunks × local
+    vocab slice only.
+    """
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"]
+    w = w.astype(ctx.compute_dtype)
+    vp = cfg.vocab_padded(ctx.tp)
+    v_loc = vp // ctx.tp
+    off = ctx.model_rank() * v_loc
+    b, s_loc, d = h_seq.shape
+    chunk = min(chunk, s_loc)
+    assert s_loc % chunk == 0
+    nch = s_loc // chunk
+
+    def one(args):
+        h, y, m = args          # (B, chunk, D), (B, chunk), (B, chunk)
+        logits = jnp.einsum("bsd,vd->bsv", h, w,
+                            preferred_element_type=jnp.float32)
+        # stop_gradient: the max is a numerical-stability shift whose
+        # gradient contribution cancels exactly; pmax has no VJP rule.
+        lmax = jax.lax.stop_gradient(
+            ctx.pmax_model(jnp.max(logits, axis=-1)))
+        lse = jnp.log(ctx.psum_model(
+            jnp.sum(jnp.exp(logits - lmax[..., None]), axis=-1))) + lmax
+        ids = y - off
+        ok = (ids >= 0) & (ids < v_loc)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(ids, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+        tgt = ctx.psum_model(jnp.where(ok, tgt, 0.0))
+        tok_loss = (lse - tgt) * m
+        return jnp.sum(tok_loss), jnp.sum(m)
+
+    hs = jnp.moveaxis(h_seq.reshape(b, nch, chunk, d), 1, 0)
+    ys = jnp.moveaxis(labels_seq.reshape(b, nch, chunk), 1, 0)
+    ms = jnp.moveaxis(mask_seq.astype(jnp.float32).reshape(b, nch, chunk), 1, 0)
+    sums, cnts = jax.lax.map(one, (hs, ys, ms))
+    return jnp.sum(sums), jnp.sum(cnts)
+
+
+def lm_head_logits(ctx: ShardCtx, params, cfg: ArchConfig, h):
+    """h: (B, T, D) -> local-vocab logits (B, T, V_loc) f32 (for decode)."""
+    w = params["lm_head"] if not cfg.tie_embeddings else params["embed"]
+    return jnp.einsum("btd,vd->btv", h, w.astype(ctx.compute_dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def greedy_sample(ctx: ShardCtx, logits):
+    """Global argmax over the vocab-sharded logits.  (B, 1, V_loc) -> (B, 1)."""
+    v_loc = logits.shape[-1]
+    loc_max = jnp.max(logits, axis=-1)
+    loc_arg = jnp.argmax(logits, axis=-1) + ctx.model_rank() * v_loc
+    gmax = ctx.pmax_model(loc_max)
+    cand = jnp.where(loc_max >= gmax, loc_arg, jnp.int32(2**30))
+    if ctx.tp > 1:
+        cand = -jax.lax.pmax(-cand, ctx.model_axis)  # global argmin of cand
+    return cand.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# Layer bodies (shared by train forward & prefill).
+# --------------------------------------------------------------------------- #
+
+def _attn_sublayer(ctx, cfg: ArchConfig, run: RunConfig, p, x_seq, positions,
+                   dims, cache: Optional[Tuple] = None):
+    """norm → attention → residual.  Returns (x_seq, (k, v) for cache)."""
+    h = common.rms_norm(x_seq, p["norm1"])
+    h_full = ctx.gather_seq(h)
+    q, k, v = attn_lib.project_qkv(ctx, sub(p, "attn"), h_full, dims,
+                                   cfg.qk_norm, positions, cfg.rope_theta)
+    if run.attn_impl == "flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        attn_fn = functools.partial(
+            fa_ops.flash_attention, causal=True, window=cfg.window,
+            block_q=run.attn_chunk_q, block_k=run.attn_chunk_k)
+    else:
+        attn_fn = functools.partial(
+            attn_lib.chunked_attention, causal=True, window=cfg.window,
+            chunk_q=run.attn_chunk_q, chunk_k=run.attn_chunk_k)
+    if run.remat_attention:
+        attn_fn = jax.checkpoint(attn_fn)
+    o = attn_fn(q, k, v)
+    o = attn_lib.output_proj(ctx, sub(p, "attn"), o)
+    return x_seq + ctx.scatter_seq(o), (k, v)
+
+
+def _ffn_sublayer(ctx, cfg, run, p, x_seq, kind: str):
+    h = common.rms_norm(x_seq, p["norm2"])
+    if kind == "mlp":
+        out = ctx.scatter_seq(mlp_lib.mlp(ctx, sub(p, "mlp"), ctx.gather_seq(h)))
+        return x_seq + out, 0.0
+    out, aux = moe_lib.moe_block(ctx, sub(p, "moe"), h, cfg.moe)
+    return x_seq + out, aux
+
+
+# --------------------------------------------------------------------------- #
+# Forward (train / prefill) — per family.
+# --------------------------------------------------------------------------- #
+
+def forward(ctx: ShardCtx, params, specs, cfg: ArchConfig, run: RunConfig,
+            x_seq, positions, want_cache: bool = False):
+    """Run all blocks.  x_seq: (B, S/tp, D).  Returns (h_seq, aux, caches)."""
+    dims = attn_lib.attn_dims(cfg.num_heads, cfg.num_kv_heads, cfg.hd, ctx.tp)
+    L = cfg.num_layers
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        lp = sub(params, "layers")
+        ls = sub(specs, "layers")
+
+        def body(carry, layer):
+            x, aux = carry
+            layer = common.gather_fsdp(layer, {k: v[1:] if v else v
+                                               for k, v in ls.items()}, ctx)
+            x, kv = _attn_sublayer(ctx, cfg, run, layer, x, positions, dims)
+            kind = "moe" if cfg.family == "moe" else "mlp"
+            x, a = _ffn_sublayer(ctx, cfg, run, layer, x, kind)
+            out = kv if want_cache else None
+            return (x, aux + a), out
+
+        body_fn = jax.checkpoint(body) if run.remat else body
+        (x, aux), caches = jax.lax.scan(
+            body_fn, (x_seq, jnp.zeros((), jnp.float32)),
+            jax.tree.map(lambda v: v, lp))
+        return common.rms_norm(x, params["final_norm"]), aux, caches
+
+    if cfg.family == "ssm":
+        lp = sub(params, "layers")
+        ls = sub(specs, "layers")
+
+        def body(carry, layer):
+            x, aux = carry
+            layer = common.gather_fsdp(layer, {k: v[1:] if v else v
+                                               for k, v in ls.items()}, ctx)
+            h = common.rms_norm(x, layer["norm1"])
+            if want_cache:
+                out, st = ssm_lib.mamba_block(ctx, sub(layer, "ssm"), h,
+                                              cfg.ssm, return_state=True)
+            else:
+                out, st = ssm_lib.mamba_block(ctx, sub(layer, "ssm"), h,
+                                              cfg.ssm), None
+            return (x + out, aux), st
+
+        body_fn = jax.checkpoint(body) if run.remat else body
+        (x, aux), caches = jax.lax.scan(
+            body_fn, (x_seq, jnp.zeros((), jnp.float32)), lp)
+        return common.rms_norm(x, params["final_norm"]), aux, caches
+
+    if cfg.family == "hybrid":
+        return _forward_hybrid(ctx, params, specs, cfg, run, x_seq, positions,
+                               dims, want_cache)
+    raise ValueError(cfg.family)
+
+
+def _forward_hybrid(ctx, params, specs, cfg, run, x_seq, positions, dims,
+                    want_cache):
+    per = cfg.attn_every
+    np_ = cfg.num_layers // per
+    nm = per - 1
+    n_moe = per // cfg.moe.every_n
+    pp = sub(params, "periods")
+    ps = sub(specs, "periods")
+
+    def reshape_stack(d, n_inner):
+        return {k: v.reshape((np_, n_inner) + v.shape[1:]) for k, v in d.items()}
+
+    stacked = {}
+    stacked.update({f"attn.{k}": v for k, v in sub(pp, "attn").items()})
+    stacked.update({f"ssm.{k}": v for k, v in
+                    reshape_stack(sub(pp, "ssm"), nm).items()})
+    stacked.update({f"moe.{k}": v for k, v in
+                    reshape_stack(sub(pp, "moe"), n_moe).items()})
+    stacked.update({f"mlp.{k}": v for k, v in
+                    reshape_stack(sub(pp, "mlp"), per - n_moe).items()})
+    stacked["norm1"] = pp["norm1"].reshape(np_, per, -1)
+    stacked["norm2"] = pp["norm2"].reshape(np_, per, -1)
+
+    def _gathered(period, group: str, idx=None):
+        """Per-sublayer param slice + FSDP gather (specs: strip the stack dim)."""
+        pl = sub(period, group)
+        if idx is not None:
+            pl = {k: v[idx] for k, v in pl.items()}
+        spec_map = {k: ps[f"{group}.{k}"][1:] for k in pl}
+        return common.gather_fsdp(pl, spec_map, ctx)
+
+    def body(carry, period):
+        x, aux = carry
+        caches = []
+        mi = 0
+        fi_moe = 0
+        fi_mlp = 0
+        for i in range(per):
+            pl = {"norm1": period["norm1"][i], "norm2": period["norm2"][i]}
+            if i == cfg.attn_offset:
+                pl.update({f"attn.{k}": v for k, v in
+                           _gathered(period, "attn").items()})
+                x, kv = _attn_sublayer(ctx, cfg, run, pl, x, positions, dims)
+                if want_cache:
+                    caches.append(kv)
+            else:
+                pl_ssm = _gathered(period, "ssm", mi)
+                h = common.rms_norm(x, pl["norm1"])
+                if want_cache:
+                    out, st = ssm_lib.mamba_block(ctx, pl_ssm, h, cfg.ssm,
+                                                  return_state=True)
+                    caches.append(st)
+                else:
+                    out = ssm_lib.mamba_block(ctx, pl_ssm, h, cfg.ssm)
+                x = x + out
+                mi += 1
+            if n_moe > 0 and i % cfg.moe.every_n == 1 % cfg.moe.every_n:
+                pl2 = {"norm2": period["norm2"][i]}
+                pl2.update({f"moe.{k}": v for k, v in
+                            _gathered(period, "moe", fi_moe).items()})
+                x, a = _ffn_sublayer(ctx, cfg, run, pl2, x, "moe")
+                aux = aux + a
+                fi_moe += 1
+            else:
+                pl2 = {"norm2": period["norm2"][i]}
+                pl2.update({f"mlp.{k}": v for k, v in
+                            _gathered(period, "mlp", fi_mlp).items()})
+                x, _ = _ffn_sublayer(ctx, cfg, run, pl2, x, "mlp")
+                fi_mlp += 1
+        out = tuple(caches) if want_cache else None
+        return (x, aux), out
+
+    body_fn = jax.checkpoint(body) if run.remat else body
+    (x, aux), caches = jax.lax.scan(
+        body_fn, (x_seq, jnp.zeros((), jnp.float32)), stacked)
+    return common.rms_norm(x, params["final_norm"]), aux, caches

@@ -1,0 +1,41 @@
+"""Launcher smoke: lower_cell on a small (2,2) mesh with a reduced arch —
+exercises the full dry-run pipeline (lower, compile, memory/cost analysis,
+loop-aware HLO parse, roofline record) without the 512-device mesh."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import jax  # noqa: E402
+
+import repro.configs.registry as registry  # noqa: E402
+from repro.configs.base import RunConfig, SHAPES, ShapeSpec  # noqa: E402
+from repro.core import types as core_types  # noqa: E402
+from repro.launch import dryrun  # noqa: E402
+
+# swap a reduced config in for the full one
+smoke = registry.smoke_config("qwen3-4b")
+registry._ARCHS["qwen3-4b-smoke"] = smoke
+SHAPES["smoke_train"] = ShapeSpec("smoke_train", "train", 64, 8)
+SHAPES["smoke_decode"] = ShapeSpec("smoke_decode", "decode", 64, 8)
+
+run = RunConfig(microbatches=2, model_parallel=True, seq_shard=True,
+                attn_chunk_q=32, attn_chunk_k=32, remat=True,
+                compression=core_types.CompressionConfig(
+                    encoder=core_types.EncoderSpec(kind="fixed_k",
+                                                   fraction=0.25),
+                    mode="shared_support", axes=("data",),
+                    min_compress_size=0))
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+
+for shp in ("smoke_train", "smoke_decode"):
+    rec, compiled = dryrun.lower_cell(mesh, "qwen3-4b-smoke", shp,
+                                      multi_pod=False, run_override=run)
+    assert rec["status"] == "ok", rec
+    rl = rec["roofline"]
+    assert rl["compute_s"] >= 0 and rl["memory_s"] > 0
+    assert rec["memory"]["total_dev"] > 0
+    print(f"[ok] {shp}: dom={rl['dominant']} "
+          f"colls={rec['collectives']['counts']}")
+
+print("DRYRUN SMALL CHECK PASSED")

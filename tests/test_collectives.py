@@ -1,0 +1,26 @@
+"""Compressed-mean collectives under shard_map, on 8 simulated devices.
+
+The checks need >1 device, and jax locks the device count at first init, so
+they run in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(keeping this pytest process single-device for the smoke tests)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run(script: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # the script sets its own
+    return subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_checks" / script)],
+        env=env, capture_output=True, text=True, timeout=900)
+
+
+def test_compressed_mean_collectives():
+    res = _run("collectives_check.py")
+    assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL COLLECTIVE CHECKS PASSED" in res.stdout

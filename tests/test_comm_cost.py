@@ -1,0 +1,91 @@
+"""Communication-cost models (§4): analytic forms + realized == expected."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm_cost, encoders, types
+
+KEY = jax.random.PRNGKey(0)
+N, D = 8, 512
+R = 16
+SPEC = types.CommSpec(protocol="sparse", r_bits=R, rbar_bits=16, rseed_bits=32)
+
+
+def test_naive_cost():
+    assert comm_cost.cost_naive(N, D, SPEC) == N * D * R
+
+
+def test_varying_uniform_p_closed_form():
+    """§4.2: C = n(r̄ + d + p·d·r) for uniform p."""
+    p = 0.25
+    probs = jnp.full((N, D), p)
+    got = comm_cost.cost_varying_length(probs, SPEC)
+    want = N * (SPEC.rbar_bits + D + p * D * R)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_sparse_uniform_p_closed_form():
+    """§4.3: C = n·r̄ + (⌈log d⌉ + r)·n·d·p."""
+    p = 1.0 / R
+    probs = jnp.full((N, D), p)
+    got = comm_cost.cost_sparse(probs, SPEC, D)
+    want = N * SPEC.rbar_bits + (9 + R) * N * D * p  # ceil(log2 512) = 9
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_sparse_seed_fixed_k_deterministic():
+    """§4.4 Eq. (9): C = n(r̄ + r̄_s) + n·k·r, deterministic."""
+    k = 32
+    got = comm_cost.cost_sparse_seed_fixed_k(N, k, SPEC)
+    assert got == N * (16 + 32) + N * k * R
+
+
+def test_binary_cost_eq11():
+    assert comm_cost.cost_binary(N, D, SPEC) == N * 2 * R + N * D
+
+
+def test_realized_matches_expected_bernoulli():
+    """E[measure_bits] == analytic cost (the §4 expectations)."""
+    p = 0.25
+    xs = jax.random.normal(jax.random.PRNGKey(1), (N, D))
+    spec = types.EncoderSpec(kind="bernoulli", fraction=p)
+
+    def bits_one(k):
+        enc = encoders.encode_batch(k, xs, spec)
+        return jnp.sum(enc.nsent)
+    nsent = jax.lax.map(jax.jit(bits_one), jax.random.split(KEY, 2000))
+    mean_bits = (N * SPEC.rbar_bits
+                 + (comm_cost.ceil_log2(D) + R) * float(jnp.mean(nsent)))
+    want = comm_cost.cost_sparse(jnp.full((N, D), p), SPEC, D)
+    np.testing.assert_allclose(mean_bits, want, rtol=0.02)
+
+
+def test_realized_fixed_k_exactly_deterministic():
+    xs = jax.random.normal(jax.random.PRNGKey(2), (N, D))
+    spec = types.EncoderSpec(kind="fixed_k", fraction=0.125)
+    cspec = types.CommSpec(protocol="sparse_seed")
+    k = types.fixed_k_from_fraction(D, 0.125)
+    for seed in range(3):
+        enc = encoders.encode_batch(jax.random.PRNGKey(seed), xs, spec)
+        got = comm_cost.measure_bits(enc, cspec, D)
+        assert got == comm_cost.cost_sparse_seed_fixed_k(N, k, cspec)
+
+
+def test_table1_cost_column():
+    """Table 1 rows: communication cost at the four named operating points."""
+    rbar, rs = SPEC.rbar_bits, SPEC.rseed_bits
+    seed_spec = types.CommSpec(protocol="sparse_seed", r_bits=R,
+                               rbar_bits=rbar, rseed_bits=rs)
+    # Example 5 (p = 1): naive == n·d·r
+    assert comm_cost.cost_naive(N, D, SPEC) == N * D * R
+    # Example 7 (p = 1/r): n(r̄s + r̄) + n·d
+    got = comm_cost.cost_sparse_seed_uniform_p(N, D, 1.0 / R, seed_spec)
+    assert got == N * (rbar + rs) + N * D
+    # Example 9 (p = 1/d): n(r̄s + r̄) + n·r
+    got = comm_cost.cost_sparse_seed_uniform_p(N, D, 1.0 / D, seed_spec)
+    assert got == N * (rbar + rs) + N * R
+    # Example 6 (p = 1/log d): n(r̄s + r̄) + n·d·r/log d
+    p = 1.0 / np.log(D)
+    got = comm_cost.cost_sparse_seed_uniform_p(N, D, p, seed_spec)
+    np.testing.assert_allclose(got, N * (rbar + rs) + N * D * R * p)

@@ -1,0 +1,19 @@
+"""Dry-run launcher pipeline on a small mesh (subprocess, 4 fake devices)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_dryrun_small_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable,
+         str(ROOT / "tests" / "distributed_checks" / "dryrun_small_check.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "DRYRUN SMALL CHECK PASSED" in res.stdout

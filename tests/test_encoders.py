@@ -1,0 +1,109 @@
+"""Encoder protocol tests: unbiasedness (Lemmas 3.1/3.3/7.1) and structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoders, types
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mc_mean(encode_fn, trials=4000):
+    def one(k):
+        return encode_fn(k).y
+    return jnp.mean(jax.lax.map(jax.jit(one), jax.random.split(KEY, trials)), axis=0)
+
+
+@pytest.mark.parametrize("p", [0.1, 0.5, 1.0])
+def test_bernoulli_unbiased(p):
+    x = jax.random.normal(jax.random.PRNGKey(1), (64,))
+    mu = jnp.mean(x)
+    est = _mc_mean(lambda k: encoders.encode_bernoulli(k, x, p, mu))
+    np.testing.assert_allclose(est, x, atol=4 * np.sqrt((1 / p - 1)) * 0.05 + 0.02)
+
+
+def test_bernoulli_p1_lossless():
+    x = jax.random.normal(jax.random.PRNGKey(2), (128,))
+    enc = encoders.encode_bernoulli(KEY, x, 1.0, jnp.mean(x))
+    np.testing.assert_allclose(enc.y, x, rtol=1e-6)
+    assert int(enc.nsent) == 128
+
+
+@pytest.mark.parametrize("k", [1, 16, 64, 128])
+def test_fixed_k_support_size(k):
+    x = jax.random.normal(jax.random.PRNGKey(3), (128,))
+    enc = encoders.encode_fixed_k(KEY, x, k, jnp.mean(x))
+    assert int(enc.nsent) == k
+    assert int(jnp.sum(enc.support)) == k
+
+
+def test_fixed_k_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(4), (64,))
+    mu = jnp.mean(x)
+    est = _mc_mean(lambda k: encoders.encode_fixed_k(k, x, 16, mu), trials=6000)
+    np.testing.assert_allclose(est, x, atol=0.15)
+
+
+def test_fixed_k_support_uniform():
+    """Every coordinate is included with probability k/d (Eq. 4 design)."""
+    x = jnp.zeros((64,))
+    def one(k):
+        return encoders.encode_fixed_k(k, x, 16, 0.0).support
+    freq = jnp.mean(jax.lax.map(jax.jit(one), jax.random.split(KEY, 4000))
+                    .astype(jnp.float32), axis=0)
+    np.testing.assert_allclose(freq, 16 / 64, atol=0.03)
+
+
+def test_binary_matches_eq12():
+    """Example 4: values ∈ {min, max}; P(max) = (x − min)/Δ."""
+    x = jax.random.normal(jax.random.PRNGKey(5), (32,))
+    vmin, vmax = float(jnp.min(x)), float(jnp.max(x))
+
+    def one(k):
+        return encoders.encode_binary(k, x).y
+    ys = jax.lax.map(jax.jit(one), jax.random.split(KEY, 3000))
+    vals = np.unique(np.asarray(ys))
+    assert all(np.isclose(v, vmin, atol=1e-5) or np.isclose(v, vmax, atol=1e-5)
+               for v in vals), vals
+    p_emp = jnp.mean((ys == vmax).astype(jnp.float32), axis=0)
+    p_true = (x - vmin) / (vmax - vmin)
+    np.testing.assert_allclose(p_emp, p_true, atol=0.04)
+
+
+def test_binary_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(6), (64,))
+    est = _mc_mean(lambda k: encoders.encode_binary(k, x), trials=8000)
+    np.testing.assert_allclose(est, x, atol=0.12)
+
+
+def test_ternary_unbiased():
+    x = jax.random.normal(jax.random.PRNGKey(7), (64,))
+    est = _mc_mean(
+        lambda k: encoders.encode_ternary(k, x, 0.3, 0.3, jnp.min(x), jnp.max(x)),
+        trials=8000)
+    np.testing.assert_allclose(est, x, atol=0.15)
+
+
+def test_identity_exact():
+    x = jax.random.normal(jax.random.PRNGKey(8), (64,))
+    enc = encoders.encode_identity(x)
+    np.testing.assert_array_equal(enc.y, x)
+
+
+def test_batch_independent_nodes():
+    """encode_batch folds per-node keys — node messages must differ."""
+    xs = jnp.ones((4, 256))
+    spec = types.EncoderSpec(kind="fixed_k", fraction=0.25)
+    enc = encoders.encode_batch(KEY, xs, spec)
+    supports = np.asarray(enc.support)
+    assert not all((supports[0] == supports[i]).all() for i in range(1, 4))
+
+
+def test_spec_dispatch_all_kinds():
+    xs = jax.random.normal(jax.random.PRNGKey(9), (8, 128))
+    for kind in types.ENCODERS:
+        spec = types.EncoderSpec(kind=kind, fraction=0.25)
+        enc = encoders.encode_batch(KEY, xs, spec)
+        assert enc.y.shape == xs.shape
+        assert bool(jnp.all(jnp.isfinite(enc.y)))

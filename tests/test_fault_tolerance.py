@@ -1,0 +1,19 @@
+"""Straggler mitigation / failure-drop path (subprocess, 8 fake devices)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_fault_tolerance():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_checks" /
+                             "fault_tolerance_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "FAULT TOLERANCE CHECK PASSED" in res.stdout

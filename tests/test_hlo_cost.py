@@ -1,0 +1,83 @@
+"""Validate the loop-aware HLO cost model against hand-computed counts."""
+import re
+
+import pytest
+
+from repro.launch import hlo_cost
+
+SAMPLE = open("/tmp/hlo_sample.txt").read() if __import__("os").path.exists(
+    "/tmp/hlo_sample.txt") else None
+
+
+def _mini_module():
+    """Build a tiny scanned module on a 2-device mesh inside this process's
+    single... Note: this test uses only the text parser on a static sample
+    generated inline (no devices needed)."""
+    return """
+HloModule test
+
+%cond (p: (s32[], f32[4,8])) -> pred[] {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p.1: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p.1 = (s32[], f32[4,8]) parameter(0)
+  %i.1 = s32[] get-tuple-element(%p.1), index=0
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i.1, %one)
+  %x = f32[4,8]{1,0} get-tuple-element(%p.1), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[4,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,8]{1,0} all-reduce(%d), replica_groups=[2,8]<=[16], to_apply=%add_comp
+  ROOT %t = (s32[], f32[4,8]) tuple(%i2, %ar)
+}
+
+%add_comp (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (arg: f32[4,8]) -> f32[4,8] {
+  %arg = f32[4,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[4,8]) tuple(%zero, %arg)
+  %w2 = (s32[], f32[4,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4,8]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_trip_count_and_flops():
+    cost = hlo_cost.analyze_text(_mini_module())
+    # dot: 2 * (4*8 output) * 8 contraction = 512 flops, x5 trips
+    assert cost.flops == pytest.approx(5 * 512)
+
+
+def test_collective_multiplied_by_trips():
+    cost = hlo_cost.analyze_text(_mini_module())
+    assert cost.coll_counts == {"all-reduce": 1}
+    assert cost.coll_exec == {"all-reduce": pytest.approx(5.0)}
+    # ring all-reduce of 4*8*4 bytes in groups of 8: 2*(7/8)*128 = 224/op
+    assert cost.coll_wire_bytes == pytest.approx(5 * 2 * (7 / 8) * 128)
+
+
+def test_bytes_loop_aware():
+    cost = hlo_cost.analyze_text(_mini_module())
+    # body per trip: add(s32: 4+4+4) + dot(128 out + 128 lhs + 256 rhs)
+    # + all-reduce(128 + 128); entry: while(tuple bytes) + gte skipped...
+    assert cost.bytes > 5 * (512 + 256)  # at least the dot+ar traffic
+    assert cost.bytes < 50_000
+
+
+@pytest.mark.skipif(SAMPLE is None, reason="sample HLO not present")
+def test_real_sample_flops_scale():
+    cost = hlo_cost.analyze_text(SAMPLE)
+    # 7-layer scan fwd (4x128 @ 128x8) + bwd dgrad + wgrad:
+    # fwd: 2*4*8*128 = 8192/layer; bwd adds ~2x more.
+    assert cost.flops >= 7 * 2 * 8192
+    assert cost.flops <= 7 * 4 * 8192
+    assert cost.coll_exec.get("all-gather", 0) >= 7

@@ -1,0 +1,134 @@
+"""Empirical MSE of each encoder == the paper's closed forms.
+
+These are the strongest paper-faithfulness checks: Lemma 3.2, Lemma 3.4,
+Example 4's exact MSE and [10]-bound, the (corrected) Lemma 7.2, and our
+shared-support variant's closed form.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import decoders, encoders, mse
+
+KEY = jax.random.PRNGKey(0)
+N, D = 8, 64
+XS = jax.random.normal(jax.random.PRNGKey(42), (N, D))
+MUS = jnp.mean(XS, axis=-1)
+X_TRUE = jnp.mean(XS, axis=0)
+
+
+def _mc_mse(sample_y, trials=6000):
+    """Monte-Carlo E||Y − X||² with Y = averaging_decoder(sample_y(key))."""
+    def one(k):
+        err = decoders.averaging_decoder(sample_y(k)) - X_TRUE
+        return jnp.sum(err * err)
+    errs = jax.lax.map(jax.jit(one), jax.random.split(KEY, trials))
+    return float(jnp.mean(errs)), float(jnp.std(errs) / np.sqrt(trials))
+
+
+def _node_keys(k):
+    return jax.vmap(lambda i: jax.random.fold_in(k, i))(jnp.arange(N))
+
+
+@pytest.mark.parametrize("p", [0.25, 0.5, 0.9])
+def test_bernoulli_matches_lemma32(p):
+    def sample(k):
+        ks = _node_keys(k)
+        return jax.vmap(lambda kk, x, m: encoders.encode_bernoulli(kk, x, p, m).y)(
+            ks, XS, MUS)
+    got, se = _mc_mse(sample)
+    want = float(mse.mse_bernoulli(XS, p, MUS))
+    assert abs(got - want) < max(5 * se, 0.02 * want), (got, want, se)
+
+
+def test_bernoulli_nonuniform_probs_lemma32():
+    probs = jax.random.uniform(jax.random.PRNGKey(3), (N, D), minval=0.2, maxval=1.0)
+
+    def sample(k):
+        ks = _node_keys(k)
+        return jax.vmap(lambda kk, x, pp, m: encoders.encode_bernoulli(kk, x, pp, m).y)(
+            ks, XS, probs, MUS)
+    got, se = _mc_mse(sample)
+    want = float(mse.mse_bernoulli(XS, probs, MUS))
+    assert abs(got - want) < max(5 * se, 0.02 * want), (got, want, se)
+
+
+@pytest.mark.parametrize("k", [8, 16, 32])
+def test_fixed_k_matches_lemma34(k):
+    def sample(kk):
+        ks = _node_keys(kk)
+        return jax.vmap(lambda k1, x, m: encoders.encode_fixed_k(k1, x, k, m).y)(
+            ks, XS, MUS)
+    got, se = _mc_mse(sample)
+    want = float(mse.mse_fixed_k(XS, k, MUS))
+    assert abs(got - want) < max(5 * se, 0.03 * want), (got, want, se)
+
+
+def test_fixed_k_shared_support_closed_form():
+    """Our TPU-native variant: all nodes share one support (DESIGN.md §2)."""
+    k = 16
+
+    def sample(kk):
+        return jax.vmap(lambda x, m: encoders.encode_fixed_k(kk, x, k, m).y)(XS, MUS)
+    got, se = _mc_mse(sample)
+    want = float(mse.mse_fixed_k_shared(XS, k, MUS))
+    assert abs(got - want) < max(5 * se, 0.03 * want), (got, want, se)
+
+
+def test_binary_matches_example4():
+    def sample(k):
+        ks = _node_keys(k)
+        return jax.vmap(lambda kk, x: encoders.encode_binary(kk, x).y)(ks, XS)
+    got, se = _mc_mse(sample)
+    want = float(mse.mse_binary(XS))
+    assert abs(got - want) < max(5 * se, 0.02 * want), (got, want, se)
+    # and the Example 4 / [10, Thm 1] bound dominates it:
+    assert want <= float(mse.mse_binary_bound(XS)) + 1e-6
+
+
+def test_ternary_matches_empirical():
+    """Corrected Lemma 7.2 (see mse.mse_ternary docstring)."""
+    p1 = p2 = 0.3
+    c1s = jnp.min(XS, axis=-1)
+    c2s = jnp.max(XS, axis=-1)
+
+    def sample(k):
+        ks = _node_keys(k)
+        return jax.vmap(
+            lambda kk, x, c1, c2: encoders.encode_ternary(kk, x, p1, p2, c1, c2).y)(
+            ks, XS, c1s, c2s)
+    got, se = _mc_mse(sample)
+    want = float(mse.mse_ternary(XS, p1, p2, c1s, c2s))
+    assert abs(got - want) < max(5 * se, 0.03 * want), (got, want, se)
+
+
+def test_ternary_printed_lemma72_fails_sanity():
+    """Documents the paper's typo: printed third term (p'c1+p''c2)² gives a
+    nonzero 'MSE' for a provably lossless configuration."""
+    xs = jnp.full((1, 4), 3.0)
+    c1 = jnp.array([3.0])  # X == c1, p'' = 0: encoder is lossless
+    c2 = jnp.array([5.0])
+    printed = float(jnp.sum(0.5 * (xs - c1[:, None]) ** 2 + 0.0
+                            + (0.5 * c1[:, None] + 0.0 * c2[:, None]) ** 2))
+    assert printed > 0  # the printed formula is wrong here…
+    corrected = float(mse.mse_ternary(xs, 0.5, 0.0, c1, c2))
+    assert corrected == pytest.approx(0.0, abs=1e-9)  # …ours is exact.
+
+
+def test_table1_mse_columns():
+    """Table 1: MSE at p ∈ {1, 1/log d, 1/r, 1/d} equals (1/p − 1)·R/n."""
+    r_bits = 16
+    R = float(mse.r_factor(XS, MUS))
+    for p in [1.0, 1.0 / np.log(D), 1.0 / r_bits, 1.0 / D]:
+        want = (1.0 / p - 1.0) * R / N
+        got = float(mse.mse_bernoulli(XS, p, MUS))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_fixed_k_equals_bernoulli_at_p_eq_kd():
+    """§3.2: fixed-k MSE == variable-support MSE at p = k/d."""
+    k = 16
+    got_fixed = float(mse.mse_fixed_k(XS, k, MUS))
+    got_bern = float(mse.mse_bernoulli(XS, k / D, MUS))
+    np.testing.assert_allclose(got_fixed, got_bern, rtol=1e-5)

@@ -1,0 +1,100 @@
+"""Hypothesis property tests on the protocol family's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import centers, comm_cost, encoders, mse, optimal, types
+
+SET = settings(max_examples=25, deadline=None)
+
+
+def _xs(seed, n, d, scale):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * scale
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 257),
+       p=st.floats(0.05, 1.0))
+def test_p_one_is_lossless_and_p_scales_support(seed, d, p):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+    enc = encoders.encode_bernoulli(jax.random.PRNGKey(seed + 1), x, 1.0,
+                                    jnp.mean(x))
+    np.testing.assert_allclose(np.asarray(enc.y), np.asarray(x), rtol=1e-5)
+    enc_p = encoders.encode_bernoulli(jax.random.PRNGKey(seed + 2), x, p,
+                                      jnp.mean(x))
+    assert 0 <= int(enc_p.nsent) <= d
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 8),
+       d=st.integers(2, 128), k=st.integers(1, 128))
+def test_fixed_k_mse_monotone_in_k(seed, n, d, k):
+    """More budget never hurts: MSE(k) ≥ MSE(k+1) (Lemma 3.4)."""
+    k = min(k, d - 1) if d > 1 else 1
+    xs = _xs(seed, n, d, 1.0)
+    mus = jnp.mean(xs, axis=-1)
+    m1 = float(mse.mse_fixed_k(xs, k, mus))
+    m2 = float(mse.mse_fixed_k(xs, min(k + 1, d), mus))
+    assert m2 <= m1 + 1e-9
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 6),
+       d=st.integers(4, 64))
+def test_optimal_probs_dominate_uniform(seed, n, d):
+    xs = _xs(seed, n, d, 2.0)
+    mus = jnp.mean(xs, axis=-1)
+    B = max(1.0, 0.25 * n * d)
+    p_opt = optimal.optimal_probs(xs, mus, B)
+    assert float(jnp.sum(p_opt)) <= B * 1.01
+    p_uni = jnp.full(xs.shape, B / (n * d))
+    assert (float(mse.mse_bernoulli(xs, p_opt, mus))
+            <= float(mse.mse_bernoulli(xs, p_uni, mus)) * 1.001)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 6),
+       d=st.integers(4, 64))
+def test_optimal_centers_never_worse_than_mean(seed, n, d):
+    xs = _xs(seed, n, d, 1.0)
+    p = jax.random.uniform(jax.random.PRNGKey(seed + 9), (n, d),
+                           minval=0.05, maxval=1.0)
+    mu_mean = jnp.mean(xs, axis=-1)
+    mu_opt = centers.optimal_centers(xs, p)
+    assert (float(mse.mse_bernoulli(xs, p, mu_opt))
+            <= float(mse.mse_bernoulli(xs, p, mu_mean)) * 1.001)
+
+
+@SET
+@given(n=st.integers(1, 32), d=st.integers(8, 4096), p=st.floats(0.01, 1.0))
+def test_sparse_seed_cost_between_bounds(n, d, p):
+    """0 < C(p) ≤ C_naive + seed overhead; monotone in p (§4.4)."""
+    spec = types.CommSpec(protocol="sparse_seed")
+    c = comm_cost.cost_sparse_seed_uniform_p(n, d, p, spec)
+    c_full = comm_cost.cost_naive(n, d, spec) + n * (spec.rbar_bits + spec.rseed_bits)
+    assert 0 < c <= c_full + 1e-6
+    c2 = comm_cost.cost_sparse_seed_uniform_p(n, d, min(1.0, p * 1.5), spec)
+    assert c2 >= c - 1e-9
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 8),
+       d=st.integers(4, 64), scale=st.floats(0.1, 10.0))
+def test_mse_scale_equivariance(seed, n, d, scale):
+    """MSE(c·X) = c²·MSE(X) for mean centers (Lemma 3.2 homogeneity)."""
+    xs = _xs(seed, n, d, 1.0)
+    mus = jnp.mean(xs, axis=-1)
+    m1 = float(mse.mse_bernoulli(xs, 0.3, mus))
+    m2 = float(mse.mse_bernoulli(scale * xs, 0.3, scale * mus))
+    np.testing.assert_allclose(m2, scale**2 * m1, rtol=1e-3)
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 512))
+def test_thm61_lower_below_upper(seed, d):
+    xs = _xs(seed, 4, d, 1.0)
+    mus = jnp.mean(xs, axis=-1)
+    B = max(1.0, d / 4)
+    lo, hi = mse.thm61_bounds(xs, mus, B)
+    assert float(lo) <= float(hi) + 1e-6

@@ -1,0 +1,115 @@
+"""Collective-launch count + step time of the bucketed gradient sync vs the
+per-leaf reference path, on an 8-device CPU mesh (subprocess: the device
+count is locked at first jax init).
+
+A realistic grad pytree has hundreds of leaves; the per-leaf rule issues one
+collective per leaf while the bucketed rule issues one per bucket (a few).
+The launch count is read from compiled HLO (loop-aware, launch/hlo_cost);
+wall time is measured on the jitted sync alone.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import time
+
+_INNER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import functools, json, time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import types
+from repro.launch import hlo_cost
+from repro.train import bucketing
+from repro.train import train_step as ts
+
+mesh = jax.make_mesh((8,), ("data",))
+MESH_AXES = ("data",)
+
+# 96 small + 24 large leaves — the shape of a real transformer grad tree.
+SHAPES = {f"s_{i:03d}": (4096,) for i in range(96)}
+SHAPES.update({f"l_{i:03d}": (65536,) for i in range(24)})
+SPECS = {n: (None,) for n in SHAPES}
+
+cmp = types.CompressionConfig(
+    encoder=types.EncoderSpec(kind="fixed_k", fraction=1 / 16),
+    mode="shared_support", axes=("data",), min_compress_size=65536)
+plan = bucketing.build_plan(SHAPES, SPECS, MESH_AXES, {"data": 8}, cmp)
+
+key0 = jax.random.PRNGKey(0)
+XS = {n: jax.random.normal(jax.random.fold_in(key0, i), (8,) + SHAPES[n])
+      for i, n in enumerate(sorted(SHAPES))}
+IN_SPECS = {n: P("data", None) for n in SHAPES}
+OUT_SPECS = {n: P() for n in SHAPES}
+
+
+def make(fn):
+    @functools.partial(compat.shard_map, mesh=mesh,
+                       in_specs=(IN_SPECS, P()), out_specs=OUT_SPECS,
+                       check_vma=False)
+    def wrapped(xs, key):
+        grads = {n: xs[n].reshape(SHAPES[n]) for n in xs}
+        return fn(grads, key)
+    return jax.jit(wrapped)
+
+
+def perleaf(grads, key):
+    out, _ = ts.sync_grads(grads, SPECS, MESH_AXES, cmp, key, ())
+    return out
+
+
+def bucketed(grads, key):
+    out, _ = bucketing.sync_grads_bucketed(grads, plan, cmp, key)
+    return out
+
+
+def measure(fn):
+    f = make(fn)
+    comp = f.lower(XS, key0).compile()
+    colls = sum(hlo_cost.analyze_text(comp.as_text()).coll_exec.values())
+    f(XS, key0)  # warmup via the jit cache
+    reps = 20
+    t0 = time.perf_counter()
+    for i in range(reps):
+        out = f(XS, jax.random.fold_in(key0, i))
+    jax.block_until_ready(out)
+    return {"colls": colls, "us": (time.perf_counter() - t0) / reps * 1e6}
+
+res = {"perleaf": measure(perleaf), "bucketed": measure(bucketed),
+       "n_leaves": len(SHAPES), "n_buckets": len(plan.buckets)}
+print(json.dumps(res))
+"""
+
+
+def rows():
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    t0 = time.perf_counter()
+    proc = subprocess.run([sys.executable, "-c", _INNER], env=env,
+                          capture_output=True, text=True, timeout=600)
+    dt = (time.perf_counter() - t0) * 1e6
+    if proc.returncode != 0:
+        return [{"name": "bucketing.launches", "us_per_call": dt,
+                 "derived": f"FAILED: {proc.stderr[-300:]}", "check": False}]
+    res = json.loads(proc.stdout.strip().splitlines()[-1])
+    pl, bk = res["perleaf"], res["bucketed"]
+    return [{
+        "name": "bucketing.launches",
+        "us_per_call": dt,
+        "derived": (f"perleaf={pl['colls']:.0f} colls/{pl['us']:.0f}us "
+                    f"bucketed={bk['colls']:.0f} colls/{bk['us']:.0f}us "
+                    f"({res['n_leaves']} leaves -> {res['n_buckets']} buckets,"
+                    f" x{pl['us'] / max(bk['us'], 1):.1f} step-time)"),
+        # the tentpole claims: ≤ 1 collective launch per bucket (the wire is
+        # fused: values + μ ride one buffer), and a step-time win.
+        "check": (bk["colls"] <= res["n_buckets"]
+                  and bk["colls"] < pl["colls"] / 10
+                  and bk["us"] < pl["us"]),
+    }]

@@ -16,6 +16,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import functools, json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import collectives, types
 from repro.launch import hlo_cost
 
@@ -27,7 +28,7 @@ for mode, frac in (("none", 1.0), ("shared_support", 1/16),
     cfg = types.CompressionConfig(
         encoder=types.EncoderSpec(kind="fixed_k", fraction=frac),
         mode=mode, axes=("data",), min_compress_size=0)
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
                        out_specs=P(), check_vma=False)
     def f(xs, key):
         return collectives.compressed_mean(xs.reshape(D), key, cfg)

@@ -9,10 +9,11 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (bench_collectives, bench_encode_speed,
-                            bench_quantization, bench_table1, bench_tradeoff)
+    from benchmarks import (bench_bucketing, bench_collectives,
+                            bench_encode_speed, bench_quantization,
+                            bench_table1, bench_tradeoff)
     mods = [bench_table1, bench_tradeoff, bench_quantization,
-            bench_encode_speed, bench_collectives]
+            bench_encode_speed, bench_collectives, bench_bucketing]
     print("name,us_per_call,derived,check")
     failed = []
     for m in mods:

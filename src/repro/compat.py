@@ -1,0 +1,51 @@
+"""Cross-version JAX compatibility shims.
+
+The only shim today is :func:`shard_map`.  The repo is written against the
+jax ≥ 0.5 surface (``jax.shard_map`` with the ``check_vma`` keyword); on
+0.4.x the same transform lives at ``jax.experimental.shard_map.shard_map``
+and the replication-lint flag is called ``check_rep``.  Every call site in
+src/, tests/ and benchmarks/ routes through here so the version split stays
+in one place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (jax ≥ 0.5); on 0.4.x ``psum(1, axis)``, which
+    constant-folds to the static axis size without emitting a collective."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f: Any = None, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, check_rep: bool | None = None,
+              **kwargs):
+    """Version-portable ``jax.shard_map``.
+
+    Accepts either lint-flag spelling (``check_vma`` is the jax ≥ 0.5 name,
+    ``check_rep`` the 0.4.x one) and forwards whichever the installed jax
+    understands.  Usable directly or via ``functools.partial`` as a
+    decorator, exactly like ``jax.shard_map``.
+    """
+    if f is None:
+        return functools.partial(
+            shard_map, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, check_rep=check_rep, **kwargs)
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        kwargs[_CHECK_KW] = check
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

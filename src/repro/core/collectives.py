@@ -16,13 +16,25 @@ encode → communicate → decode pipeline:
   length-k buffer (ring-bandwidth optimal).  MSE closed form:
   :func:`repro.core.mse.mse_fixed_k_shared`.
 
+* ``bernoulli wire`` — real §4.4 wire path for the variable-size-support
+  encoder (Eq. (1), uniform p): the support S_i = {j : u_j < p} depends
+  only on the node's PRNG stream, so peers regenerate it from
+  fold_in(key, rank) and only a capacity-padded value buffer (cap ≈ p·d
+  plus slack, :func:`repro.core.comm_cost.bernoulli_capacity`) plus μ_i
+  travels — honest sub-d wire traffic instead of the dense simulation.
+
 * ``dense_sim``      — encode per node, exact pmean of the dense encoded
   vectors: bit-identical estimates to gather_decode with no wire savings;
-  supports every encoder (incl. variable-size support and binary) and is
-  used for correctness tests and MSE studies under shard_map.
+  supports every encoder (incl. data-dependent-support binary/ternary and
+  the §6 optimal-probability policies) and is used for correctness tests
+  and MSE studies under shard_map.
+
+Wire fusion: every mode ships the μ_i scalar *inside* the value buffer
+(one concatenated collective per call) so a bucketed train step issues
+exactly one collective launch per bucket (repro.train.bucketing).
 
 All functions take and return a single flat f32 vector; pytree plumbing
-lives in repro.train (grad flattening / chunking / per-leaf policies).
+lives in repro.train (grad flattening / bucketing / per-leaf policies).
 """
 from __future__ import annotations
 
@@ -32,6 +44,8 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+from repro.core import comm_cost
 from repro.core import encoders
 from repro.core import types as t
 from repro.kernels.fixed_k_encode import ops as fk
@@ -44,8 +58,8 @@ def _axis_rank_size(axes: Axes):
     rank = jnp.zeros((), jnp.int32)
     n = 1
     for ax in axes:
-        rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-        n *= jax.lax.axis_size(ax)
+        rank = rank * compat.axis_size(ax) + jax.lax.axis_index(ax)
+        n *= compat.axis_size(ax)
     return rank, n
 
 
@@ -81,29 +95,34 @@ def _fixed_k_wire(x, key, cfg: t.CompressionConfig, shared: bool):
 
 
 def fixed_k_mean_shared(x, key, cfg: t.CompressionConfig):
-    """shared_support mode: psum(k wire values) + psum(μ) + scatter-decode.
+    """shared_support mode: one psum of [k wire values ‖ μ] + scatter-decode.
 
-    Collective traffic: kb·BLOCK wire-dtype elements + 1 scalar — versus d
-    full-precision elements for exact pmean.
+    Collective traffic: kb·BLOCK + 1 wire-dtype elements — versus d
+    full-precision elements for exact pmean — in a single launch (μ rides
+    the tail slot of the value buffer).
     """
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
     vals, mu, ids = _fixed_k_wire(flat, key, cfg, shared=True)
     # the psum runs at the wire dtype (r = 16 bits/coordinate, matching the
     # paper's r and the bf16-native TPU all-reduce)
-    vals = jax.lax.pmean(vals, cfg.axes).astype(jnp.float32)
-    mu = jax.lax.pmean(mu, cfg.axes)
+    wire = jnp.concatenate([vals.reshape(-1),
+                            mu.astype(cfg.wire_dtype)[None]])
+    wire = jax.lax.pmean(wire, cfg.axes).astype(jnp.float32)
+    vals = wire[:-1].reshape(-1, fk.BLOCK)
+    mu = wire[-1]
     y = fk.fixed_k_decode(vals, ids, mu, shape)
     return y.astype(dtype)
 
 
 def fixed_k_mean_gather(x, key, cfg: t.CompressionConfig):
-    """gather_decode mode: independent supports, all_gather values + μ.
+    """gather_decode mode: independent supports, one all_gather of
+    [values ‖ μ] per node.
 
-    Wire per node: n·(kb·BLOCK) wire-dtype elements + n scalars (receives),
-    kb·BLOCK sends — the star protocol §4.4 with implicit seeds.  Decode
-    regenerates every peer's support locally and averages the dense
-    reconstructions:  Y = mean_i μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
+    Wire per node: n·(kb·BLOCK + 1) wire-dtype elements (receives),
+    kb·BLOCK + 1 sends — the star protocol §4.4 with implicit seeds.
+    Decode regenerates every peer's support locally and averages the dense
+    reconstructions:  Y = mean μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
     """
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
@@ -113,13 +132,14 @@ def fixed_k_mean_gather(x, key, cfg: t.CompressionConfig):
     rank, n = _axis_rank_size(cfg.axes)
     my_ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
     mu = _center(flat, cfg.encoder.center)
-    vals = fk.fixed_k_encode(flat, my_ids, mu).astype(cfg.wire_dtype)
+    vals = fk.fixed_k_encode(flat, my_ids, mu)
 
     # ---- the wire: values + centers only (supports regenerate from seed).
-    all_vals = _gather_nested(vals, cfg.axes)        # (n, kb, BLOCK)
-    all_mu = _gather_nested(mu, cfg.axes)            # (n,)
-    all_vals = all_vals.reshape(n, kb, fk.BLOCK).astype(jnp.float32)
-    all_mu = all_mu.reshape(n)
+    wire = jnp.concatenate([vals.reshape(-1), mu[None]]).astype(cfg.wire_dtype)
+    all_wire = _gather_nested(wire, cfg.axes).reshape(
+        n, kb * fk.BLOCK + 1).astype(jnp.float32)
+    all_vals = all_wire[:, :-1].reshape(n, kb, fk.BLOCK)
+    all_mu = all_wire[:, -1]
 
     # ---- decode: Y = mean μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
     def body(i, acc):
@@ -129,6 +149,73 @@ def fixed_k_mean_gather(x, key, cfg: t.CompressionConfig):
     acc = jax.lax.fori_loop(0, n, body, jnp.zeros((nb, fk.BLOCK), jnp.float32))
     y = (acc / n + jnp.mean(all_mu)).reshape(-1)[:d]
     return y.reshape(shape).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Bernoulli (variable-size-support) wire path — the §4.4 seed trick.
+# --------------------------------------------------------------------------- #
+
+def _bernoulli_support(key, d: int, p):
+    """The S_i of Eq. (1) under uniform probs: data-independent, so any peer
+    regenerates it from the shared per-step key + node index alone."""
+    u = jax.random.uniform(key, (d,), dtype=jnp.float32)
+    return u < p
+
+
+def bernoulli_pack(flat, key, p: float, cap: int, mu):
+    """Compact the Eq. (1) encoding into a (cap,) value buffer.
+
+    Sent coordinates land at their support-rank position; coordinates whose
+    rank overflows ``cap`` (≈6σ tail, see comm_cost.bernoulli_capacity) are
+    dropped — the decoder regenerates the same ranks and drops them too, so
+    encode/decode stay consistent (cost: a ~1e-9-probability bias toward μ
+    on the dropped coordinates).
+    """
+    d = flat.shape[0]
+    sent = _bernoulli_support(key, d, p)
+    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
+    scaled = flat / p - (1.0 - p) / p * mu
+    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
+    return jnp.zeros((cap,), jnp.float32).at[idx].set(scaled, mode="drop")
+
+
+def bernoulli_unpack(buf, key, p: float, cap: int, mu, d: int):
+    """Regenerate node ``key``'s support and reconstruct its dense Y_i."""
+    sent = _bernoulli_support(key, d, p)
+    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
+    valid = sent & (pos < cap)
+    vals = buf[jnp.clip(pos, 0, cap - 1)]
+    return jnp.where(valid, vals, mu)
+
+
+def bernoulli_mean_gather(x, key, cfg: t.CompressionConfig):
+    """gather_decode for the Bernoulli encoder with a real wire format.
+
+    Each node all_gathers one [cap value slots ‖ μ] buffer; peers
+    regenerate the supports from fold_in(key, i).  Bit accounting:
+    comm_cost.cost_sparse_seed_capacity(n, cap, spec) — the static-shape
+    realization of Eq. (10).
+    """
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    d = flat.size
+    p = float(cfg.encoder.fraction)
+    cap = comm_cost.bernoulli_capacity(d, p)
+    rank, n = _axis_rank_size(cfg.axes)
+    mu = _center(flat, cfg.encoder.center)
+    buf = bernoulli_pack(flat, jax.random.fold_in(key, rank), p, cap, mu)
+
+    wire = jnp.concatenate([buf, mu[None]]).astype(cfg.wire_dtype)
+    all_wire = _gather_nested(wire, cfg.axes).reshape(
+        n, cap + 1).astype(jnp.float32)
+
+    def body(i, acc):
+        y_i = bernoulli_unpack(all_wire[i, :-1], jax.random.fold_in(key, i),
+                               p, cap, all_wire[i, -1], d)
+        return acc + y_i
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
+    return (acc / n).reshape(shape).astype(dtype)
 
 
 def _gather_nested(v, axes: Axes):
@@ -169,9 +256,16 @@ def compressed_mean(x, key, cfg: t.CompressionConfig):
     if cfg.mode == "shared_support":
         return fixed_k_mean_shared(x, key, cfg)
     if cfg.mode == "gather_decode":
-        if cfg.encoder.kind != "fixed_k":
-            return dense_sim_mean(x, key, cfg)  # §4.3 var-support: see module doc
-        return fixed_k_mean_gather(x, key, cfg)
+        if cfg.encoder.kind == "fixed_k":
+            return fixed_k_mean_gather(x, key, cfg)
+        if (cfg.encoder.kind == "bernoulli" and cfg.encoder.probs == "uniform"
+                and cfg.encoder.center in ("zero", "mean", "min")):
+            # §4.4 seed trick: the uniform-p support is data-independent, so
+            # it regenerates peer-side and only values + μ hit the wire.
+            return bernoulli_mean_gather(x, key, cfg)
+        # data-dependent supports/probs (binary, ternary, §6 optimal):
+        # message sizes are not SPMD-static — simulate densely.
+        return dense_sim_mean(x, key, cfg)
     if cfg.mode == "dense_sim":
         return dense_sim_mean(x, key, cfg)
     raise ValueError(cfg.mode)

@@ -62,7 +62,37 @@ def cost_binary(n: int, d: int, spec: CommSpec) -> float:
     return float(n * 2 * spec.r_bits + n * d)
 
 
-def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None) -> float:
+# --- §4.4 realized on SPMD hardware: capacity-padded value buffers -------- #
+
+def bernoulli_capacity(d: int, p: float, slack_sigmas: float = 6.0) -> int:
+    """Wire-buffer slots for the seed-trick Bernoulli protocol.
+
+    SPMD collectives need static shapes, but the Bernoulli support size
+    |S_i| ~ Binomial(d, p) is random.  The wire path therefore ships a
+    fixed buffer of  cap = min(d, ⌈p·d + slack·σ⌉)  value slots with
+    σ = √(d·p(1−p)); the (≈1e-9 at 6σ) overflow tail is dropped by both
+    encoder and decoder symmetrically (see collectives.bernoulli_pack).
+    """
+    if not (0.0 < p <= 1.0):
+        raise ValueError(f"p must be in (0, 1], got {p}")
+    sigma = math.sqrt(max(d * p * (1.0 - p), 0.0))
+    cap = int(math.ceil(p * d + slack_sigmas * sigma))
+    return max(1, min(d, cap))
+
+
+def cost_sparse_seed_capacity(n: int, cap: int, spec: CommSpec) -> float:
+    """§4.4 with capacity padding:  C = n·(r̄ + r̄_s) + n·cap·r.
+
+    The static-shape realization of Eq. (10): every node ships exactly
+    ``cap`` value slots (from :func:`bernoulli_capacity`) plus its center
+    and seed, instead of the random |S_i| ≈ p·d slots of the idealized
+    protocol.  The overhead over Eq. (10) is ≤ n·r·(slack·σ + 1) bits.
+    """
+    return float(n * (spec.rbar_bits + spec.rseed_bits) + n * cap * spec.r_bits)
+
+
+def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None,
+         cap=None) -> float:
     """Dispatch on ``spec.protocol``; see the per-protocol functions."""
     if spec.protocol == "naive":
         return cost_naive(n, d, spec)
@@ -73,6 +103,8 @@ def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None) -> float
         assert probs is not None
         return cost_sparse(probs, spec, d)
     if spec.protocol == "sparse_seed":
+        if cap is not None:
+            return cost_sparse_seed_capacity(n, cap, spec)
         if k is not None:
             return cost_sparse_seed_fixed_k(n, k, spec)
         assert p is not None

@@ -59,19 +59,23 @@ def compressed_mean_ef(x, err, key, cfg: t.CompressionConfig):
         ids = fk.sample_blocks(key, nb, kb)
         vals = fk.fixed_k_encode(flat, ids, mu, scale=1.0)
         my_recon = fk.fixed_k_decode(vals, ids, mu, (d,))
-        gvals = jax.lax.pmean(vals.astype(cfg.wire_dtype).astype(jnp.float32),
-                              cfg.axes)
-        gmu = jax.lax.pmean(mu, cfg.axes)
-        est = fk.fixed_k_decode(gvals, ids, gmu, shape)
+        # one fused launch: μ rides the tail slot of the value buffer
+        wire = jnp.concatenate([vals.reshape(-1), mu[None]]).astype(
+            cfg.wire_dtype).astype(jnp.float32)
+        gwire = jax.lax.pmean(wire, cfg.axes)
+        gvals = gwire[:-1].reshape(-1, fk.BLOCK)
+        est = fk.fixed_k_decode(gvals, ids, gwire[-1], shape)
     else:  # gather_decode: independent supports
         rank, n = collectives._axis_rank_size(cfg.axes)
         ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
         vals = fk.fixed_k_encode(flat, ids, mu, scale=1.0)
         my_recon = fk.fixed_k_decode(vals, ids, mu, (d,))
-        wire = vals.astype(cfg.wire_dtype)
-        all_vals = collectives._gather_nested(wire, cfg.axes).reshape(
-            n, kb, fk.BLOCK).astype(jnp.float32)
-        all_mu = collectives._gather_nested(mu, cfg.axes).reshape(n)
+        wire = jnp.concatenate([vals.reshape(-1), mu[None]]).astype(
+            cfg.wire_dtype)
+        all_wire = collectives._gather_nested(wire, cfg.axes).reshape(
+            n, kb * fk.BLOCK + 1).astype(jnp.float32)
+        all_vals = all_wire[:, :-1].reshape(n, kb, fk.BLOCK)
+        all_mu = all_wire[:, -1]
 
         def body(i, acc):
             ids_i = fk.sample_blocks(jax.random.fold_in(key, i), nb, kb)

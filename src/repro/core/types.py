@@ -91,6 +91,32 @@ class CommSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Gradient-bucketing knobs (:mod:`repro.train.bucketing`).
+
+    The paper's cost model (§4–§6) charges per communicated coordinate, but
+    a real train step also pays a fixed collective-launch overhead per
+    call.  Bucketing flattens the grad pytree into a few fixed-capacity
+    f32 buckets grouped by sync signature and issues ONE collective per
+    bucket instead of one per leaf.
+
+    Attributes:
+      enabled: route train-step gradient sync through buckets.
+      capacity: max f32 elements per bucket (default 4M ≈ 16 MiB of f32).
+        A single leaf larger than this gets a dedicated oversize bucket —
+        leaves are never split across buckets, so pack→scatter round-trips
+        the pytree bit-exactly.
+    """
+
+    enabled: bool = True
+    capacity: int = 1 << 22
+
+    def __post_init__(self):
+        if self.capacity <= 0:
+            raise ValueError(f"bucket capacity must be positive, got {self.capacity}")
+
+
+@dataclasses.dataclass(frozen=True)
 class CompressionConfig:
     """End-to-end configuration for compressed gradient aggregation.
 
@@ -122,6 +148,10 @@ class CompressionConfig:
     axes: Tuple[str, ...] = ("data",)
     error_feedback: bool = False
     wire_dtype: str = "bfloat16"
+    # Gradient bucketing (repro.train.bucketing): one collective per bucket
+    # instead of one per pytree leaf.  Applies to every mode incl. "none"
+    # (exact buckets batch the plain psum-means too).
+    bucket: BucketSpec = dataclasses.field(default_factory=BucketSpec)
     # Leaves smaller than this many elements are aggregated exactly (psum):
     # biases/norm scales are a negligible fraction of the wire bytes and are
     # disproportionately harmed by sparsification.

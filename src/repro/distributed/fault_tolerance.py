@@ -18,6 +18,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.collectives import partial_mean  # noqa: F401  (re-export)
 
 
@@ -40,8 +41,8 @@ class FailurePlan:
         rank = jnp.zeros((), jnp.int32)
         n = 1
         for ax in axes:
-            rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
-            n *= jax.lax.axis_size(ax)
+            rank = rank * compat.axis_size(ax) + jax.lax.axis_index(ax)
+            n *= compat.axis_size(ax)
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
         u = jax.random.uniform(key, (n,))
         alive = (u >= self.rate).at[jnp.argmax(u)].set(True)

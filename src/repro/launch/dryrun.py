@@ -107,9 +107,15 @@ def lower_cell(mesh, arch: str, shape_name: str, *, multi_pod: bool,
             v={k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
                for k, v in aparams.items()})
         use_ef = run.compression.error_feedback
-        ef_sds = ({k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
-                   for k, v in aparams.items()} if use_ef else
-                  {k: _sds((), jnp.float32, mesh, P()) for k in aparams})
+        plan = ts.grad_sync_plan(mesh, run, aparams, specs)
+        if use_ef and plan is not None:
+            ef_sds = {bid: _sds(shp, jnp.float32, mesh, P())
+                      for bid, shp in plan.ef_shapes().items()}
+        elif use_ef:
+            ef_sds = {k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
+                      for k, v in aparams.items()}
+        else:
+            ef_sds = {k: _sds((), jnp.float32, mesh, P()) for k in aparams}
         b_sds = batch_sds(mesh, cfg, shape, bspecs)
         step_sds = _sds((), jnp.int32, mesh, P())
         lowered = step_fn.lower(p_sds, opt_sds, ef_sds, b_sds, step_sds)

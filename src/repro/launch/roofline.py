@@ -176,6 +176,8 @@ def analyze(compiled, model_flops_total: float, num_devices: int,
     """
     from repro.launch import hlo_cost
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     text = hlo_text if hlo_text is not None else compiled.as_text()
     hc = hlo_cost.analyze_text(text)
     colls = CollectiveStats(counts=hc.coll_counts,

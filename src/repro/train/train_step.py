@@ -12,6 +12,12 @@ X_i.  Those axes are synchronized by:
   * compressed_mean (encode → collective → decode) on axes ∩ cfg.axes for
     leaves ≥ min_compress_size — the paper's technique on the wire;
   * exact psum-mean on the remainder (small leaves, non-selected axes).
+
+By default the rule executes *bucketed* (repro.train.bucketing, enabled by
+cmp.bucket): leaves sharing a sync signature are packed into a few flat
+f32 buckets and the step issues one collective per bucket instead of one
+per leaf; sync_grads below is the per-leaf reference path (bucket.enabled
+= False), kept for A/B tests and as executable documentation of the rule.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import SHAPES, ArchConfig, RunConfig, ShapeSpec
 from repro.core import collectives as coll
 from repro.core import error_feedback as ef_lib
@@ -30,6 +37,7 @@ from repro.core import types as core_types
 from repro.models import model as model_lib
 from repro.models.common import ShardCtx
 from repro.optim import optimizers as opt_lib
+from repro.train import bucketing
 
 
 # --------------------------------------------------------------------------- #
@@ -47,6 +55,17 @@ def mesh_sizes_of(mesh) -> Dict[str, int]:
 def abstract_specs(key, cfg: ArchConfig, ctx: ShardCtx, mesh_sizes, run):
     """Param spec tree (+ global ShapeDtypeStructs) without device state."""
     return model_lib.init(key, cfg, ctx, mesh_sizes, run, abstract=True)
+
+
+def grad_sync_plan(mesh, run: RunConfig, aparams, specs):
+    """The BucketPlan the train step will sync with (None = per-leaf path).
+
+    Single source of truth for the plan derivation: build_train_step and
+    launch/dryrun (which must mirror the step's ef_state pytree when
+    lowering) both call this with the same abstract tree.
+    """
+    return bucketing.plan_for_run(aparams, specs, tuple(mesh.axis_names),
+                                  mesh_sizes_of(mesh), run.compression)
 
 
 # --------------------------------------------------------------------------- #
@@ -96,19 +115,10 @@ def sync_grads(grads, specs, mesh_axes, cmp: core_types.CompressionConfig,
     flat_specs = specs
     new_ef = {} if ef_state is not None else None
 
-    def leaf_axes(spec):
-        present = set()
-        for s in spec:
-            if s is None:
-                continue
-            for a in ((s,) if isinstance(s, str) else s):
-                present.add(a)
-        return tuple(a for a in mesh_axes if a not in present)
-
     out = {}
     for i, (name, g) in enumerate(sorted(grads.items())):
         spec = flat_specs[name]
-        axes = leaf_axes(spec)
+        axes = bucketing.leaf_sync_axes(spec, mesh_axes)
         if not axes:
             out[name] = g
             continue
@@ -151,13 +161,16 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
     mesh_axes = tuple(mesh.axis_names)
     ctx = model_lib.make_ctx(cfg, run, msizes)
     key0 = jax.random.PRNGKey(base_seed)
-    _, specs = abstract_specs(key0, cfg, ctx, msizes, run)
+    aparams, specs = abstract_specs(key0, cfg, ctx, msizes, run)
     baxes = batch_axes_for(cfg, run, shape, msizes)
     dp = 1
     for a in baxes:
         dp *= msizes[a]
     global_tokens = float(shape.global_batch * shape.seq_len)
     use_ef = run.compression.error_feedback
+    # Bucketed sync (repro.train.bucketing): static plan over the abstract
+    # grad tree; one collective per bucket instead of one per leaf.
+    plan = grad_sync_plan(mesh, run, aparams, specs)
 
     param_ps = {k: spec_to_pspec(v) for k, v in specs.items()}
     bspecs = batch_pspec(cfg, baxes)
@@ -194,9 +207,14 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
                 mb_body, (g0, jnp.zeros(())), jnp.arange(n_mb))
             metrics = {}
 
-        grads, new_ef = sync_grads(
-            grads, specs, mesh_axes, run.compression, key, baxes,
-            ef_state if use_ef else None)
+        if plan is not None:
+            grads, new_ef = bucketing.sync_grads_bucketed(
+                grads, plan, run.compression, key,
+                ef_state if use_ef else None)
+        else:
+            grads, new_ef = sync_grads(
+                grads, specs, mesh_axes, run.compression, key, baxes,
+                ef_state if use_ef else None)
         if use_ef:
             ef_state = new_ef
         # sharding-aware grad norm: per leaf, psum the sum-of-squares over
@@ -228,21 +246,33 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
     def sharded_init(key):
         params, _ = model_lib.init(key, cfg, ctx, msizes, run)
         opt_state = opt_lib.adamw_init(params)
-        ef_state = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                 params) if use_ef else
-                    jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params))
+        if use_ef and plan is not None:
+            ef_state = bucketing.init_ef_state(plan)
+        elif use_ef:
+            ef_state = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params)
+        else:
+            ef_state = jax.tree.map(lambda p: jnp.zeros((), jnp.float32),
+                                    params)
         return params, opt_state, ef_state
 
     opt_ps = opt_lib.AdamWState(step=P(), m=param_ps, v=param_ps)
-    ef_ps = param_ps if use_ef else jax.tree.map(lambda _: P(), param_ps)
+    if use_ef and plan is not None:
+        # per-bucket residuals: per-device state; replication is claimed
+        # (P()) but not checked, same as the per-leaf EF specs below.
+        ef_ps = {bid: P() for bid in plan.ef_shapes()}
+    elif use_ef:
+        ef_ps = param_ps
+    else:
+        ef_ps = jax.tree.map(lambda _: P(), param_ps)
     metrics_ps = {"loss": P(), "grad_norm": P(), "lr": P()}
 
-    step_fn = jax.jit(jax.shard_map(
+    step_fn = jax.jit(compat.shard_map(
         sharded_step, mesh=mesh,
         in_specs=(param_ps, opt_ps, ef_ps, bspecs, P()),
         out_specs=(param_ps, opt_ps, ef_ps, metrics_ps),
         check_vma=False))
-    init_fn = jax.jit(jax.shard_map(
+    init_fn = jax.jit(compat.shard_map(
         sharded_init, mesh=mesh, in_specs=(P(),),
         out_specs=(param_ps, opt_ps, ef_ps), check_vma=False))
     return step_fn, init_fn, specs, bspecs

@@ -21,6 +21,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core import collectives, error_feedback, mse, types  # noqa: E402
 from repro.kernels.fixed_k_encode import ops as fk  # noqa: E402
 
@@ -36,7 +37,7 @@ MUS = jnp.mean(XS, axis=-1)
 
 
 def run_mode(cfg: types.CompressionConfig):
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
                        out_specs=P(), check_vma=False)
     def trial_stats(xs, key):
         x = xs.reshape(D)
@@ -110,8 +111,24 @@ check("dense_sim.unbiased",
 check("dense_sim.mse", abs(float(mse_emp) - want) < 0.12 * want,
       f"emp={float(mse_emp):.4f} want={want:.4f}")
 
+# ---- gather_decode with bernoulli: the real §4.4 seed-trick wire path -------
+# (capacity-padded value buffers; supports regenerate peer-side from seeds).
+# Same estimate distribution as dense_sim (Lemma 3.2 MSE), but the wire only
+# carries cap ≈ p·d + 6σ values + μ per node.
+cfg = types.CompressionConfig(
+    encoder=types.EncoderSpec(kind="bernoulli", fraction=0.25, center="mean"),
+    mode="gather_decode", axes=("data",), wire_dtype="float32",
+    min_compress_size=0)
+mean_est, mse_emp = run_mode(cfg)
+want = float(mse.mse_bernoulli(XS, 0.25, MUS))
+check("bern_wire.unbiased",
+      np.allclose(np.asarray(mean_est), X_TRUE, atol=6 * np.sqrt(want / D)),
+      f"max|bias|={np.max(np.abs(np.asarray(mean_est) - X_TRUE)):.4f}")
+check("bern_wire.mse", abs(float(mse_emp) - want) < 0.12 * want,
+      f"emp={float(mse_emp):.4f} want={want:.4f}")
+
 # ---- partial_mean (straggler drop) ------------------------------------------
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
+@functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"),), out_specs=P(),
                    check_vma=False)
 def partial(xs):
     x = xs.reshape(D)
@@ -128,7 +145,7 @@ cfg = types.CompressionConfig(
     mode="shared_support", axes=("data",), wire_dtype="float32",
     min_compress_size=0)
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+@functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
                    out_specs=(P(), P("data")), check_vma=False)
 def ef_round(xs, key):
     x = xs.reshape(D)
@@ -143,7 +160,7 @@ est, errs = jax.jit(ef_round)(XS, jax.random.PRNGKey(3))
 check("ef.shapes", errs.shape == (N, D) and bool(jnp.all(jnp.isfinite(errs))))
 # EF over repeated rounds on a *constant* x must drive the aggregate error
 # to zero (compression error is recycled):
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+@functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
                    out_specs=P(), check_vma=False)
 def ef_many(xs, key):
     x = xs.reshape(D)

@@ -11,6 +11,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.distributed.fault_tolerance import FailurePlan, robust_mean  # noqa: E402
 
 mesh = jax.make_mesh((8,), ("data",))
@@ -19,7 +20,7 @@ XS = jax.random.normal(jax.random.PRNGKey(0), (N, D))
 plan = FailurePlan(rate=0.3, seed=5)
 
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"),),
+@functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"),),
                    out_specs=P(), check_vma=False)
 def agg(xs):
     return robust_mean(xs.reshape(D), 3, ("data",), plan)

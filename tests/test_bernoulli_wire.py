@@ -1,0 +1,113 @@
+"""Single-device tests of the §4.4 seed-trick Bernoulli wire path:
+capacity sizing, pack→unpack round trip against the reference encoder, and
+the capacity-padded bit accounting (comm_cost.cost_sparse_seed_capacity)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import collectives, comm_cost, encoders, types
+
+D = 4096
+P_FRAC = 0.25  # exactly representable in f32 -> bit-exact scaling math
+
+
+def _x(seed=0, d=D):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,)) * 0.7
+
+
+# --------------------------------------------------------------------------- #
+# Capacity.
+# --------------------------------------------------------------------------- #
+
+def test_capacity_bounds_and_monotonicity():
+    for d in (64, 1024, 1 << 20):
+        prev = 0
+        for p in (0.01, 0.05, 0.25, 0.5, 1.0):
+            cap = comm_cost.bernoulli_capacity(d, p)
+            assert p * d <= cap <= d, (d, p, cap)
+            assert cap >= prev  # monotone in p at fixed slack
+            prev = cap
+        assert comm_cost.bernoulli_capacity(d, 1.0) == d  # p=1: zero variance
+
+
+def test_capacity_rejects_bad_p():
+    with pytest.raises(ValueError):
+        comm_cost.bernoulli_capacity(D, 0.0)
+    with pytest.raises(ValueError):
+        comm_cost.bernoulli_capacity(D, 1.5)
+
+
+def test_capacity_covers_realized_support():
+    """cap at 6σ slack must exceed the realized |S_i| for many keys."""
+    cap = comm_cost.bernoulli_capacity(D, P_FRAC)
+    x = _x()
+    mu = jnp.mean(x)
+    nsents = []
+    for s in range(200):
+        enc = encoders.encode_bernoulli(jax.random.PRNGKey(s), x, P_FRAC, mu)
+        nsents.append(int(enc.nsent))
+    assert max(nsents) <= cap
+    # ... while staying within the documented slack of the expectation
+    assert cap - P_FRAC * D <= 6 * np.sqrt(D * P_FRAC * (1 - P_FRAC)) + 1
+
+
+# --------------------------------------------------------------------------- #
+# Pack / unpack round trip.
+# --------------------------------------------------------------------------- #
+
+def test_pack_unpack_matches_reference_encoder():
+    """Wire-path reconstruction == dense Eq. (1) encoder output, per key."""
+    x = _x().astype(jnp.float32)
+    mu = jnp.mean(x)
+    cap = comm_cost.bernoulli_capacity(D, P_FRAC)
+    for s in range(5):
+        key = jax.random.PRNGKey(100 + s)
+        buf = collectives.bernoulli_pack(x, key, P_FRAC, cap, mu)
+        y = collectives.bernoulli_unpack(buf, key, P_FRAC, cap, mu, D)
+        enc = encoders.encode_bernoulli(key, x, P_FRAC, mu)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(enc.y),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_overflow_drops_symmetrically():
+    """cap < |S_i|: both sides treat overflow ranks as unsent (-> μ)."""
+    x = _x(1).astype(jnp.float32)
+    mu = jnp.mean(x)
+    key = jax.random.PRNGKey(7)
+    cap = 16  # far below E[|S|] = 1024: massive forced overflow
+    buf = collectives.bernoulli_pack(x, key, P_FRAC, cap, mu)
+    y = collectives.bernoulli_unpack(buf, key, P_FRAC, cap, mu, D)
+    enc = encoders.encode_bernoulli(key, x, P_FRAC, mu)
+    sent = np.asarray(enc.support)
+    pos = np.cumsum(sent) - 1
+    kept = sent & (pos < cap)
+    np.testing.assert_allclose(np.asarray(y)[kept],
+                               np.asarray(enc.y)[kept], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(y)[~kept], float(mu), rtol=1e-6)
+    assert int(kept.sum()) == cap  # buffer fully used before dropping
+
+
+# --------------------------------------------------------------------------- #
+# Bit accounting.
+# --------------------------------------------------------------------------- #
+
+def test_capacity_cost_bounds_eq10():
+    """Eq. (10) ≤ capacity cost ≤ Eq. (10) + n·r·(6σ + 1): the price of
+    static shapes is exactly the slack, never more."""
+    spec = types.CommSpec(protocol="sparse_seed")
+    for n in (1, 8, 64):
+        for p in (0.05, 0.25, 0.9):
+            cap = comm_cost.bernoulli_capacity(D, p)
+            c_cap = comm_cost.cost(spec, n=n, d=D, cap=cap)
+            c_p = comm_cost.cost(spec, n=n, d=D, p=p)
+            sigma = np.sqrt(D * p * (1 - p))
+            assert c_p <= c_cap <= c_p + n * spec.r_bits * (6 * sigma + 1) + 1e-6
+
+
+def test_capacity_cost_below_naive():
+    """The whole point: sub-naive wire at p < 1 (§4.1 vs §4.4)."""
+    spec = types.CommSpec(protocol="sparse_seed")
+    cap = comm_cost.bernoulli_capacity(D, 1 / 16)
+    assert (comm_cost.cost_sparse_seed_capacity(8, cap, spec)
+            < 0.25 * comm_cost.cost_naive(8, D, spec))

@@ -1,8 +1,15 @@
-"""Hypothesis property tests on the protocol family's invariants."""
+"""Hypothesis property tests on the protocol family's invariants.
+
+Degrades to a skip when hypothesis isn't installed (it is pinned in
+requirements-dev.txt, so CI always runs these for real).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import centers, comm_cost, encoders, mse, optimal, types
 

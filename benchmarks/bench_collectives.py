@@ -1,6 +1,18 @@
 """Wire bytes of the compressed-mean collective vs exact pmean, measured
 from lowered HLO on an 8-device mesh (subprocess: device count is locked at
-first jax init, and benchmarks must see 1 device by default)."""
+first jax init, and benchmarks must see 1 device by default).
+
+Two byte conventions are reported per mode:
+
+* ``wire_bytes`` — ring-adjusted per-device wire traffic (hlo_cost's
+  roofline convention: all-reduce pays 2·b·(s−1)/s, all-gather b·(s−1)/s);
+* ``payload_bytes`` — the star-protocol payload Σ_i |message_i| that the
+  paper's C sums charge (all-gather: the gathered result size; all-reduce:
+  n × the reduced buffer).  The packed bit-plane modes must match
+  ``comm_cost`` accounting exactly in this convention, and binary must
+  undercut the dense f32 simulation ≥ 8× (it lands at ~32×: 1 bit vs 32
+  bits per coordinate).
+"""
 from __future__ import annotations
 
 import json
@@ -17,17 +29,27 @@ import functools, json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro import compat
-from repro.core import collectives, types
+from repro.core import collectives, comm_cost, types
 from repro.launch import hlo_cost
 
 mesh = jax.make_mesh((8,), ("data",))
+N = 8
 D = 1 << 20
+MODES = {
+    "none": ("none", types.EncoderSpec(kind="fixed_k", fraction=1.0)),
+    "shared_support": ("shared_support",
+                       types.EncoderSpec(kind="fixed_k", fraction=1/16)),
+    "gather_decode": ("gather_decode",
+                      types.EncoderSpec(kind="fixed_k", fraction=1/16)),
+    "binary_dense": ("dense_sim", types.EncoderSpec(kind="binary")),
+    "binary_packed": ("gather_decode", types.EncoderSpec(kind="binary")),
+    "ternary_packed": ("gather_decode",
+                       types.EncoderSpec(kind="ternary", fraction=1/16)),
+}
 res = {}
-for mode, frac in (("none", 1.0), ("shared_support", 1/16),
-                   ("gather_decode", 1/16)):
-    cfg = types.CompressionConfig(
-        encoder=types.EncoderSpec(kind="fixed_k", fraction=frac),
-        mode=mode, axes=("data",), min_compress_size=0)
+for name, (mode, enc) in MODES.items():
+    cfg = types.CompressionConfig(encoder=enc, mode=mode, axes=("data",),
+                                  min_compress_size=0)
     @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
                        out_specs=P(), check_vma=False)
     def f(xs, key):
@@ -37,8 +59,21 @@ for mode, frac in (("none", 1.0), ("shared_support", 1/16),
         jax.ShapeDtypeStruct((2,), jnp.uint32))
     comp = lowered.compile()
     hc = hlo_cost.analyze_text(comp.as_text())
-    res[mode] = {"wire_bytes": hc.coll_wire_bytes,
+    # star payload: undo the per-op ring factors (group size 8).
+    payload = (hc.coll_bytes_by_op.get("all-gather", 0.0) / (7 / 8)
+               + hc.coll_bytes_by_op.get("all-reduce", 0.0)
+               / (2 * 7 / 8) * N)
+    res[name] = {"wire_bytes": hc.coll_wire_bytes,
+                 "payload_bytes": payload,
                  "ops": {k: round(v) for k, v in hc.coll_exec.items()}}
+
+# comm_cost accounting for the packed planes (bf16 wire -> r = 16).
+spec16 = types.CommSpec(protocol="binary", r_bits=16)
+res["_expect"] = {
+    "binary_packed": comm_cost.cost_binary_packed(N, D, spec16) / 8,
+    "ternary_packed": comm_cost.cost_ternary_packed(
+        N, D, comm_cost.bernoulli_capacity(D, 1/16), spec16) / 8,
+}
 print(json.dumps(res))
 """
 
@@ -59,12 +94,34 @@ def rows():
     exact = res["none"]["wire_bytes"]
     shared = res["shared_support"]["wire_bytes"]
     gather = res["gather_decode"]["wire_bytes"]
-    return [{
-        "name": "collectives.wire_bytes",
-        "us_per_call": dt,
-        "derived": (f"exact={exact:.3e}B shared={shared:.3e}B "
-                    f"(x{exact / max(shared, 1):.1f} less) "
-                    f"gather={gather:.3e}B (x{exact / max(gather, 1):.1f})"),
-        # shared-support at k/d = 1/16 must cut ≥8x vs exact all-reduce
-        "check": shared * 8 < exact,
-    }]
+    dense_pl = res["binary_dense"]["payload_bytes"]
+    bin_pl = res["binary_packed"]["payload_bytes"]
+    tern_pl = res["ternary_packed"]["payload_bytes"]
+    expect = res["_expect"]
+    return [
+        {
+            "name": "collectives.wire_bytes",
+            "us_per_call": dt,
+            "derived": (f"exact={exact:.3e}B shared={shared:.3e}B "
+                        f"(x{exact / max(shared, 1):.1f} less) "
+                        f"gather={gather:.3e}B (x{exact / max(gather, 1):.1f})"),
+            # shared-support at k/d = 1/16 must cut ≥8x vs exact all-reduce
+            "check": shared * 8 < exact,
+        },
+        {
+            "name": "collectives.packed_planes",
+            "us_per_call": dt,
+            "derived": (f"dense_sim={dense_pl:.3e}B binary={bin_pl:.3e}B "
+                        f"(x{dense_pl / max(bin_pl, 1):.1f} less) "
+                        f"ternary={tern_pl:.3e}B "
+                        f"(x{dense_pl / max(tern_pl, 1):.1f}); "
+                        f"ring-wire binary={res['binary_packed']['wire_bytes']:.3e}B"
+                        f" vs dense={res['binary_dense']['wire_bytes']:.3e}B"),
+            # ≥8x payload reduction for the packed 1-bit plane vs the dense
+            # f32 simulation, and both packed modes must match comm_cost
+            # accounting exactly.
+            "check": (bin_pl * 8 <= dense_pl
+                      and bin_pl == expect["binary_packed"]
+                      and tern_pl == expect["ternary_packed"]),
+        },
+    ]

@@ -54,12 +54,49 @@ _TRAIN_COMPRESSION = core_types.CompressionConfig(
                                    center="mean"),
     mode="shared_support", axes=("pod",))
 
+# Named wire-path presets spanning the paper's trade-off curve, selectable
+# by string via get_run_config(compression="..."). All cross-pod by
+# default; the axes are re-pointed at ("data",) for single-pod runs.
+COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
+    # Example 7: fixed-k at k/d = 1/r, TPU-native shared support (psum).
+    "fixed_k_1bit": _TRAIN_COMPRESSION,
+    # Eq. (1) at p = 1/r via the §4.4 seed trick (capacity-padded values).
+    "bernoulli_seed_1bit": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="bernoulli", fraction=1.0 / 16,
+                                       center="mean"),
+        mode="gather_decode", axes=("pod",)),
+    # §4.5 Eq. (11): packed 1-bit sign plane + (vmin, vmax) tail.
+    "binary_packed": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="binary", center="min"),
+        mode="gather_decode", axes=("pod",)),
+    # §7.1 Eq. (21): packed 2-bit plane, 1/16 pass-through mass.
+    "ternary_packed": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
+                                       center="min"),
+        mode="gather_decode", axes=("pod",)),
+}
+
+
+def compression_preset(name: str,
+                       axes: Tuple[str, ...] | None = None
+                       ) -> core_types.CompressionConfig:
+    """Resolve a named preset, optionally re-pointing its mesh axes."""
+    if name not in COMPRESSION_PRESETS:
+        raise KeyError(f"unknown compression preset {name!r}; "
+                       f"have {sorted(COMPRESSION_PRESETS)}")
+    cfg = COMPRESSION_PRESETS[name]
+    return dataclasses.replace(cfg, axes=axes) if axes is not None else cfg
+
 
 def get_run_config(arch: str, shape: str, *, multi_pod: bool = False,
-                   compression: core_types.CompressionConfig | None = None
+                   compression: core_types.CompressionConfig | str | None = None
                    ) -> RunConfig:
     cfg = get_config(arch)
     kind = SHAPES[shape].kind
+
+    if isinstance(compression, str):
+        compression = compression_preset(
+            compression, axes=("pod",) if multi_pod else ("data",))
 
     mb = 1
     if kind == "train":

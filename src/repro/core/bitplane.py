@@ -1,0 +1,187 @@
+"""Packed bit-plane wire formats for binary / ternary quantization.
+
+This module realizes the paper's extreme operating point — ~1–2 bits per
+coordinate (§4.5 Eq. (11), §7.1 Eq. (21)) — as honest SPMD wire buffers
+instead of the dense f32 simulation.  Every buffer is a single flat uint32
+vector so one bucket still costs one collective launch
+(:mod:`repro.core.collectives` all_gathers it as-is).
+
+Wire format (all segments uint32 words, concatenated)
+-----------------------------------------------------
+
+``binary`` (Example 4 / Suresh et al. [10]; 1 bit/coordinate):
+
+  ============  =======================  =====================================
+  words         count                    content
+  ============  =======================  =====================================
+  plane         PW = ceil(d/32)          sign plane: bit j of word j//32 at
+                                         offset j%32 is 1 iff Y(j) = X^max
+  tail centers  CW = ceil(2*r/32)        (vmin, vmax) at wire precision r
+  ============  =======================  =====================================
+
+``ternary`` (Eq. (21) with p1 = p2 = (1 − p_pass)/2, c1 = X^min,
+c2 = X^max; 2 bits/coordinate + p_pass full-precision values):
+
+  ============  =======================  =====================================
+  words         count                    content
+  ============  =======================  =====================================
+  plane         PW = ceil(2d/32)         2-bit branch index per coordinate:
+                                         0 → c1 ("down"), 1 → c2 ("up"),
+                                         2 → pass-through (3 unused)
+  values        VW = ceil(cap*r/32)      capacity-padded pass-through values
+                                         Y(j) in support-rank order
+  tail centers  CW = ceil(2*r/32)        (c1, c2) at wire precision r
+  ============  =======================  =====================================
+
+Tail-slot centers: the per-node scalars ride the same uint32 buffer
+(bitcast f32, or two bf16 packed per word at r = 16), mirroring how μ rides
+the value buffer in the fixed-k / Bernoulli paths — no second launch.
+
+Pass-through handling: the pass-through count |{j : sym_j = 2}| is
+Binomial(d, p_pass), not SPMD-static, so like the Bernoulli §4.4 path the
+value segment is capacity-padded (:func:`repro.core.comm_cost
+.bernoulli_capacity` with p = p_pass).  Coordinates whose support rank
+overflows ``cap`` are dropped by the encoder and replaced by (c1 + c2)/2 by
+the decoder — a P ≈ 1e-9 (6σ) event; both sides agree on the rank order so
+the substitution is symmetric.  Unlike §4.4 there is NO seed term: the
+plane itself travels (binary/ternary branch choices are data-dependent and
+cannot regenerate peer-side).
+
+Sampling is bit-identical to :mod:`repro.core.encoders` (same key, same
+``jax.random.uniform`` draws), so at f32 wire precision
+pack → unpack reproduces ``encode_binary(key, x).y`` /
+``encode_ternary(key, x, …).y`` exactly — the gather collectives built on
+these buffers agree with ``dense_sim_mean`` to float tolerance (verified in
+tests/distributed_checks/quantized_wire_check.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoders
+from repro.core import types as t
+from repro.kernels.bitplane import ops as bp_ops
+
+WORD = 32
+
+
+def wire_bits(wire_dtype) -> int:
+    """Bits per wire float (r): 32 for float32, 16 for bfloat16/float16."""
+    r = int(jnp.dtype(wire_dtype).itemsize) * 8
+    if r not in (16, 32):
+        raise ValueError(f"unsupported wire dtype {wire_dtype!r} (r={r})")
+    return r
+
+
+def float_words(count: int, wire_dtype) -> int:
+    """uint32 words carrying ``count`` floats at wire precision."""
+    return -(-count * wire_bits(wire_dtype) // WORD)
+
+
+def floats_to_words(v, wire_dtype):
+    """(m,) f32 -> (float_words(m),) uint32 at wire precision.
+
+    f32 wire: bitcast.  16-bit wire: round to the wire dtype and pack two
+    halves per word, little-endian (element 2i in the low half).
+    """
+    v = v.reshape(-1).astype(jnp.float32)
+    if wire_bits(wire_dtype) == 32:
+        return jax.lax.bitcast_convert_type(v, jnp.uint32)
+    h = jax.lax.bitcast_convert_type(
+        v.astype(wire_dtype), jnp.uint16).astype(jnp.uint32)
+    h = jnp.pad(h, (0, (-h.shape[0]) % 2)).reshape(-1, 2)
+    return h[:, 0] | (h[:, 1] << jnp.uint32(16))
+
+
+def words_to_floats(w, count: int, wire_dtype):
+    """Inverse of :func:`floats_to_words`; returns (count,) f32."""
+    w = w.reshape(-1)
+    if wire_bits(wire_dtype) == 32:
+        return jax.lax.bitcast_convert_type(w, jnp.float32)[:count]
+    halves = jnp.stack([w & jnp.uint32(0xFFFF), w >> jnp.uint32(16)],
+                       axis=-1).reshape(-1)[:count]
+    return jax.lax.bitcast_convert_type(
+        halves.astype(jnp.uint16), jnp.dtype(wire_dtype)).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------- #
+# Binary: 1-bit sign plane + (vmin, vmax) tail.
+# --------------------------------------------------------------------------- #
+
+def binary_wire_words(d: int, wire_dtype) -> int:
+    """Total uint32 words of one node's binary wire buffer."""
+    return bp_ops.num_words(d, 1) + float_words(2, wire_dtype)
+
+
+def binary_pack(flat, key, wire_dtype):
+    """Encode (d,) f32 -> (binary_wire_words(d),) uint32 wire buffer.
+
+    Uses encoders.encode_binary for the stochastic rounding (same PRNG
+    stream as the dense simulation).
+    """
+    enc = encoders.encode_binary(key, flat)
+    plane = bp_ops.pack_bits(enc.support.astype(jnp.uint32), 1)
+    tail = floats_to_words(
+        jnp.stack([enc.extras["vmin"], enc.extras["vmax"]]), wire_dtype)
+    return jnp.concatenate([plane, tail])
+
+
+def binary_unpack(buf, d: int, wire_dtype):
+    """Reconstruct the dense Y_i (f32) from one node's wire buffer."""
+    pw = bp_ops.num_words(d, 1)
+    bits = bp_ops.unpack_bits(buf[:pw], 1, d)
+    c = words_to_floats(buf[pw:], 2, wire_dtype)
+    return jnp.where(bits > 0, c[1], c[0])
+
+
+# --------------------------------------------------------------------------- #
+# Ternary: 2-bit branch plane + capacity-padded values + (c1, c2) tail.
+# --------------------------------------------------------------------------- #
+
+def ternary_wire_words(d: int, cap: int, wire_dtype) -> int:
+    """Total uint32 words of one node's ternary wire buffer."""
+    return (bp_ops.num_words(d, 2) + float_words(cap, wire_dtype)
+            + float_words(2, wire_dtype))
+
+
+def ternary_pack(flat, key, p_pass: float, cap: int, wire_dtype):
+    """Encode (d,) f32 -> (ternary_wire_words(d, cap),) uint32 wire buffer.
+
+    Delegates the sampling to encoders.encode (kind="ternary": c1 = min(x),
+    c2 = max(x), p1 = p2 = (1 − p_pass)/2) and packs its branch indices —
+    so the decoded Y_i is bit-equal to the dense encoder's by construction
+    (modulo the ~1e-9 capacity overflow and wire-precision rounding).
+    """
+    enc = encoders.encode(
+        key, flat.astype(jnp.float32),
+        t.EncoderSpec(kind="ternary", fraction=p_pass))
+    sym = enc.extras["branch"]
+    sent = sym == 2  # enc.y holds the pass-through value exactly there
+    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
+    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
+    vbuf = jnp.zeros((cap,), jnp.float32).at[idx].set(enc.y, mode="drop")
+
+    plane = bp_ops.pack_bits(sym, 2)
+    return jnp.concatenate([
+        plane,
+        floats_to_words(vbuf, wire_dtype),
+        floats_to_words(jnp.stack([enc.extras["c1"], enc.extras["c2"]]),
+                        wire_dtype),
+    ])
+
+
+def ternary_unpack(buf, d: int, cap: int, wire_dtype):
+    """Reconstruct the dense Y_i (f32) from one node's ternary buffer."""
+    pw = bp_ops.num_words(d, 2)
+    vw = float_words(cap, wire_dtype)
+    sym = bp_ops.unpack_bits(buf[:pw], 2, d)
+    vals = words_to_floats(buf[pw:pw + vw], cap, wire_dtype)
+    c = words_to_floats(buf[pw + vw:], 2, wire_dtype)
+    pos = jnp.cumsum((sym == 2).astype(jnp.int32)) - 1
+    valid = (sym == 2) & (pos < cap)
+    v = vals[jnp.clip(pos, 0, cap - 1)]
+    fallback = 0.5 * (c[0] + c[1])  # symmetric 6σ-overflow substitute
+    return jnp.where(sym == 0, c[0],
+                     jnp.where(sym == 1, c[1],
+                               jnp.where(valid, v, fallback)))

@@ -23,11 +23,18 @@ encode → communicate → decode pipeline:
   plus slack, :func:`repro.core.comm_cost.bernoulli_capacity`) plus μ_i
   travels — honest sub-d wire traffic instead of the dense simulation.
 
+* ``binary / ternary wire`` — packed bit-plane wire paths (§4.5 Eq. (11) /
+  §7.1 Eq. (21)): each node ships a 1-bit (binary) or 2-bit (ternary)
+  symbol plane packed into uint32 words, with centers — and, for ternary,
+  a capacity-padded pass-through value segment — fused into the same
+  buffer (:mod:`repro.core.bitplane`).  The branch choices are
+  data-dependent so the plane travels explicitly (no §4.4 seed trick);
+  the wire is ~d bits/node instead of 32·d.
+
 * ``dense_sim``      — encode per node, exact pmean of the dense encoded
   vectors: bit-identical estimates to gather_decode with no wire savings;
-  supports every encoder (incl. data-dependent-support binary/ternary and
-  the §6 optimal-probability policies) and is used for correctness tests
-  and MSE studies under shard_map.
+  supports every encoder (incl. the §6 optimal-probability policies) and
+  is used for correctness tests and MSE studies under shard_map.
 
 Wire fusion: every mode ships the μ_i scalar *inside* the value buffer
 (one concatenated collective per call) so a bucketed train step issues
@@ -45,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.core import bitplane
 from repro.core import comm_cost
 from repro.core import encoders
 from repro.core import types as t
@@ -78,11 +86,27 @@ def _center(x, policy: str):
 # fixed-k (block-structured) compressed mean — the production encoder.
 # --------------------------------------------------------------------------- #
 
+def fixed_k_blocks(d: int, fraction: float) -> int:
+    """kb: number of sampled blocks for a d-vector at the given fraction."""
+    nb = fk.num_blocks(d)
+    return max(1, min(nb, int(round(fraction * nb))))
+
+
+def fixed_k_wire_slots(d: int, fraction: float) -> int:
+    """Wire-dtype elements of one fixed-k gather buffer: kb·BLOCK values + μ."""
+    return fixed_k_blocks(d, fraction) * fk.BLOCK + 1
+
+
+def bernoulli_wire_slots(d: int, fraction: float) -> int:
+    """Wire-dtype elements of one §4.4 Bernoulli buffer: cap values + μ."""
+    return comm_cost.bernoulli_capacity(d, float(fraction)) + 1
+
+
 def _fixed_k_wire(x, key, cfg: t.CompressionConfig, shared: bool):
     """Encode the local vector: (values (kb, BLOCK), mu, block_ids)."""
     d = x.size
     nb = fk.num_blocks(d)
-    kb = max(1, min(nb, int(round(cfg.encoder.fraction * nb))))
+    kb = fixed_k_blocks(d, cfg.encoder.fraction)
     if shared:
         ksup = key  # same subset on every node
     else:
@@ -128,7 +152,7 @@ def fixed_k_mean_gather(x, key, cfg: t.CompressionConfig):
     flat = x.reshape(-1).astype(jnp.float32)
     d = flat.size
     nb = fk.num_blocks(d)
-    kb = max(1, min(nb, int(round(cfg.encoder.fraction * nb))))
+    kb = fixed_k_blocks(d, cfg.encoder.fraction)
     rank, n = _axis_rank_size(cfg.axes)
     my_ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
     mu = _center(flat, cfg.encoder.center)
@@ -188,6 +212,28 @@ def bernoulli_unpack(buf, key, p: float, cap: int, mu, d: int):
     return jnp.where(valid, vals, mu)
 
 
+def _star_mean_gather(x, key, cfg: t.CompressionConfig, pack_fn, unpack_fn):
+    """Shared star-protocol scaffold for the variable-support wire paths.
+
+    Pack the local (d,) f32 vector into one flat wire buffer, all_gather
+    it over cfg.axes, reconstruct every peer's dense Y_i locally and
+    average: Y = (1/n) Σ_i unpack(wire_i).  ``pack_fn(flat, kenc)`` builds
+    the node's buffer; ``unpack_fn(row, i)`` decodes peer i's row.
+    """
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    d = flat.size
+    rank, n = _axis_rank_size(cfg.axes)
+    buf = pack_fn(flat, jax.random.fold_in(key, rank))
+    all_buf = _gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
+
+    def body(i, acc):
+        return acc + unpack_fn(all_buf[i], i)
+
+    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
+    return (acc / n).reshape(shape).astype(dtype)
+
+
 def bernoulli_mean_gather(x, key, cfg: t.CompressionConfig):
     """gather_decode for the Bernoulli encoder with a real wire format.
 
@@ -196,26 +242,59 @@ def bernoulli_mean_gather(x, key, cfg: t.CompressionConfig):
     comm_cost.cost_sparse_seed_capacity(n, cap, spec) — the static-shape
     realization of Eq. (10).
     """
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1).astype(jnp.float32)
-    d = flat.size
+    d = x.size
     p = float(cfg.encoder.fraction)
     cap = comm_cost.bernoulli_capacity(d, p)
-    rank, n = _axis_rank_size(cfg.axes)
-    mu = _center(flat, cfg.encoder.center)
-    buf = bernoulli_pack(flat, jax.random.fold_in(key, rank), p, cap, mu)
 
-    wire = jnp.concatenate([buf, mu[None]]).astype(cfg.wire_dtype)
-    all_wire = _gather_nested(wire, cfg.axes).reshape(
-        n, cap + 1).astype(jnp.float32)
+    def pack(flat, kenc):
+        mu = _center(flat, cfg.encoder.center)
+        buf = bernoulli_pack(flat, kenc, p, cap, mu)
+        return jnp.concatenate([buf, mu[None]]).astype(cfg.wire_dtype)
 
-    def body(i, acc):
-        y_i = bernoulli_unpack(all_wire[i, :-1], jax.random.fold_in(key, i),
-                               p, cap, all_wire[i, -1], d)
-        return acc + y_i
+    def unpack(row, i):
+        row = row.astype(jnp.float32)
+        return bernoulli_unpack(row[:-1], jax.random.fold_in(key, i),
+                                p, cap, row[-1], d)
 
-    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
-    return (acc / n).reshape(shape).astype(dtype)
+    return _star_mean_gather(x, key, cfg, pack, unpack)
+
+
+# --------------------------------------------------------------------------- #
+# Binary / ternary packed bit-plane wire paths (§4.5 / §7.1).
+# --------------------------------------------------------------------------- #
+
+def binary_mean_gather(x, key, cfg: t.CompressionConfig):
+    """gather_decode for binary quantization with the packed 1-bit plane.
+
+    Each node all_gathers one uint32 buffer of [sign plane ‖ vmin, vmax]
+    (:mod:`repro.core.bitplane`); every peer reconstructs the dense
+    Y_i = vmin_i + bit_ij·Δ_i locally and averages.  Bit accounting:
+    comm_cost.cost_binary_packed — Eq. (11)'s 2·n·r + n·d rounded up to
+    wire words, no seed term (the plane is data-dependent and travels).
+    """
+    d = x.size
+    return _star_mean_gather(
+        x, key, cfg,
+        lambda flat, kenc: bitplane.binary_pack(flat, kenc, cfg.wire_dtype),
+        lambda row, i: bitplane.binary_unpack(row, d, cfg.wire_dtype))
+
+
+def ternary_mean_gather(x, key, cfg: t.CompressionConfig):
+    """gather_decode for the ternary encoder (Eq. (21)) with a 2-bit plane.
+
+    Wire per node: [2-bit branch plane ‖ cap pass-through value slots ‖
+    c1, c2] in one uint32 buffer; the pass-through count is Binomial(d,
+    p_pass), so the value segment is capacity-padded exactly like the
+    Bernoulli §4.4 path.  Bit accounting: comm_cost.cost_ternary_packed.
+    """
+    d = x.size
+    p_pass = float(cfg.encoder.fraction)
+    cap = comm_cost.bernoulli_capacity(d, p_pass)
+    return _star_mean_gather(
+        x, key, cfg,
+        lambda flat, kenc: bitplane.ternary_pack(flat, kenc, p_pass, cap,
+                                                 cfg.wire_dtype),
+        lambda row, i: bitplane.ternary_unpack(row, d, cap, cfg.wire_dtype))
 
 
 def _gather_nested(v, axes: Axes):
@@ -245,6 +324,36 @@ def dense_sim_mean(x, key, cfg: t.CompressionConfig):
     return y.reshape(shape).astype(dtype)
 
 
+def gather_wire_kind(cfg: t.CompressionConfig) -> str:
+    """The wire format gather_decode mode will actually use for ``cfg``.
+
+    One of "fixed_k" | "bernoulli" | "binary" | "ternary" | "dense".
+    This is THE dispatch rule — compressed_mean routes through it, and
+    accounting (repro.train.bucketing.bucket_wire_bits) must consult it so
+    configs that fall back to the dense simulation (§6 optimal
+    probabilities, optimal centers on the seed-trick path) are charged
+    dense f32 bits, not the compressed wire they never ride.
+    """
+    e = cfg.encoder
+    if e.kind == "fixed_k":
+        return "fixed_k"
+    if (e.kind == "bernoulli" and e.probs == "uniform"
+            and e.center in ("zero", "mean", "min")):
+        # §4.4 seed trick: the uniform-p support is data-independent, so
+        # it regenerates peer-side and only values + μ hit the wire.
+        return "bernoulli"
+    if e.kind == "binary":
+        # §4.5: data-dependent branch probabilities, so the packed 1-bit
+        # plane travels explicitly (no seed trick possible).
+        return "binary"
+    if e.kind == "ternary" and e.probs == "uniform":
+        # §7.1: 2-bit plane + capacity-padded pass-through values.
+        return "ternary"
+    # data-dependent probabilities (§6 optimal policies): message
+    # sizes/planes are not wire-modelled yet — simulate densely.
+    return "dense"
+
+
 def compressed_mean(x, key, cfg: t.CompressionConfig):
     """Estimate mean(x) over cfg.axes under the configured protocol.
 
@@ -256,16 +365,12 @@ def compressed_mean(x, key, cfg: t.CompressionConfig):
     if cfg.mode == "shared_support":
         return fixed_k_mean_shared(x, key, cfg)
     if cfg.mode == "gather_decode":
-        if cfg.encoder.kind == "fixed_k":
-            return fixed_k_mean_gather(x, key, cfg)
-        if (cfg.encoder.kind == "bernoulli" and cfg.encoder.probs == "uniform"
-                and cfg.encoder.center in ("zero", "mean", "min")):
-            # §4.4 seed trick: the uniform-p support is data-independent, so
-            # it regenerates peer-side and only values + μ hit the wire.
-            return bernoulli_mean_gather(x, key, cfg)
-        # data-dependent supports/probs (binary, ternary, §6 optimal):
-        # message sizes are not SPMD-static — simulate densely.
-        return dense_sim_mean(x, key, cfg)
+        fn = {"fixed_k": fixed_k_mean_gather,
+              "bernoulli": bernoulli_mean_gather,
+              "binary": binary_mean_gather,
+              "ternary": ternary_mean_gather,
+              "dense": dense_sim_mean}[gather_wire_kind(cfg)]
+        return fn(x, key, cfg)
     if cfg.mode == "dense_sim":
         return dense_sim_mean(x, key, cfg)
     raise ValueError(cfg.mode)

@@ -62,6 +62,15 @@ def cost_binary(n: int, d: int, spec: CommSpec) -> float:
     return float(n * 2 * spec.r_bits + n * d)
 
 
+def cost_ternary(n: int, d: int, p_pass: float, spec: CommSpec) -> float:
+    """§7.1 analogue of Eq. (11):  C = 2·n·r + 2·n·d + n·d·p_pass·r.
+
+    Two centers (c1, c2), a 2-bit branch index per coordinate, and the
+    expected p_pass·d full-precision pass-through values of Eq. (21).
+    """
+    return float(n * 2 * spec.r_bits + n * 2 * d + n * d * p_pass * spec.r_bits)
+
+
 # --- §4.4 realized on SPMD hardware: capacity-padded value buffers -------- #
 
 def bernoulli_capacity(d: int, p: float, slack_sigmas: float = 6.0) -> int:
@@ -91,9 +100,43 @@ def cost_sparse_seed_capacity(n: int, cap: int, spec: CommSpec) -> float:
     return float(n * (spec.rbar_bits + spec.rseed_bits) + n * cap * spec.r_bits)
 
 
+def _pad_words(bits: float) -> float:
+    """Round a bit count up to whole uint32 wire words."""
+    return 32.0 * math.ceil(bits / 32.0)
+
+
+def cost_binary_packed(n: int, d: int, spec: CommSpec) -> float:
+    """Eq. (11) realized as packed uint32 planes (repro.core.bitplane).
+
+    C = n·(32·⌈d/32⌉ + 32·⌈2r/32⌉): the 1-bit sign plane rounded up to
+    whole words, plus the (vmin, vmax) tail slots at wire precision.  The
+    overhead over Eq. (11) at the same r is < 2·32 bits per node; there is
+    no r̄_s seed term — the plane is data-dependent and travels explicitly.
+    """
+    return float(n * (_pad_words(d) + _pad_words(2 * spec.r_bits)))
+
+
+def cost_ternary_packed(n: int, d: int, cap: int, spec: CommSpec) -> float:
+    """Eq. (21) realized as a packed 2-bit plane + capacity-padded values.
+
+    C = n·(32·⌈2d/32⌉ + 32·⌈cap·r/32⌉ + 32·⌈2r/32⌉) with ``cap`` from
+    :func:`bernoulli_capacity` at p = p_pass — the static-shape realization
+    of :func:`cost_ternary`, overhead ≤ n·r·(slack·σ + 1) + word padding.
+    """
+    return float(n * (_pad_words(2 * d) + _pad_words(cap * spec.r_bits)
+                      + _pad_words(2 * spec.r_bits)))
+
+
 def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None,
-         cap=None) -> float:
-    """Dispatch on ``spec.protocol``; see the per-protocol functions."""
+         cap=None, packed: bool = False) -> float:
+    """Dispatch on ``spec.protocol``; see the per-protocol functions.
+
+    ``packed=True`` selects the word-padded wire realizations for the
+    plane protocols (cost_binary_packed / cost_ternary_packed, the latter
+    requiring ``cap``); the ideal §4.5/§7.1 forms otherwise.  For
+    ``sparse_seed``, passing ``cap`` selects the capacity-padded
+    realization directly — that path has no separate plane to pad.
+    """
     if spec.protocol == "naive":
         return cost_naive(n, d, spec)
     if spec.protocol == "varying":
@@ -110,7 +153,15 @@ def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None,
         assert p is not None
         return cost_sparse_seed_uniform_p(n, d, p, spec)
     if spec.protocol == "binary":
+        if packed:
+            return cost_binary_packed(n, d, spec)
         return cost_binary(n, d, spec)
+    if spec.protocol == "ternary":
+        if packed:
+            assert cap is not None, "packed ternary cost needs cap"
+            return cost_ternary_packed(n, d, cap, spec)
+        assert p is not None
+        return cost_ternary(n, d, p, spec)
     raise ValueError(spec.protocol)
 
 
@@ -135,4 +186,8 @@ def measure_bits(encoded, spec: CommSpec, d: int) -> float:
         return float(n * (spec.rbar_bits + spec.rseed_bits) + spec.r_bits * nsent)
     if spec.protocol == "binary":
         return float(n * 2 * spec.r_bits + n * d)
+    if spec.protocol == "ternary":
+        # 2 centers + the 2-bit plane + r bits per realized pass-through
+        # coordinate (encoded.nsent counts the full-precision branch).
+        return float(n * 2 * spec.r_bits + n * 2 * d + spec.r_bits * nsent)
     raise ValueError(spec.protocol)

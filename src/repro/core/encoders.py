@@ -147,9 +147,13 @@ def encode_ternary(key, x, p1, p2, c1, c2) -> Encoded:
     y_rest = (x - p1 * c1 - p2 * c2) / restsafe
     y = jnp.where(u < p1, c1, jnp.where(u < p1 + p2, c2, y_rest))
     sent = u >= p1 + p2  # the full-precision branch
+    # branch index (0 → c1, 1 → c2, 2 → pass-through): the symbol the
+    # packed 2-bit wire plane ships (repro.core.bitplane).
+    branch = jnp.where(u < p1, 0, jnp.where(u < p1 + p2, 1, 2))
     return Encoded(y=y, mu=jnp.asarray(c1, x.dtype), support=sent,
                    nsent=jnp.sum(sent.astype(jnp.int32)),
-                   extras={"c1": jnp.asarray(c1), "c2": jnp.asarray(c2)})
+                   extras={"c1": jnp.asarray(c1), "c2": jnp.asarray(c2),
+                           "branch": branch.astype(jnp.uint32)})
 
 
 def encode_identity(x) -> Encoded:

@@ -52,7 +52,7 @@ def compressed_mean_ef(x, err, key, cfg: t.CompressionConfig):
         return jax.lax.pmean(x, cfg.axes), err
 
     nb = fk.num_blocks(d)
-    kb = max(1, min(nb, int(round(cfg.encoder.fraction * nb))))
+    kb = collectives.fixed_k_blocks(d, cfg.encoder.fraction)
     mu = collectives._center(flat, cfg.encoder.center)
 
     if cfg.mode == "shared_support":

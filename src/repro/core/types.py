@@ -78,6 +78,8 @@ class CommSpec:
       * ``sparse_seed``   — r bits per sent coordinate + seed (§4.4; only for
                             fixed_k or uniform-p encoders).
       * ``binary``        — 2r + d bits per node (§4.5).
+      * ``ternary``       — 2r + 2d + p_pass·d·r bits per node (§7.1,
+                            Eq. (21): 2-bit plane + pass-through values).
     """
 
     protocol: str = "sparse_seed"
@@ -86,7 +88,8 @@ class CommSpec:
     rseed_bits: int = DEFAULT_RSEED_BITS
 
     def __post_init__(self):
-        if self.protocol not in ("naive", "varying", "sparse", "sparse_seed", "binary"):
+        if self.protocol not in ("naive", "varying", "sparse", "sparse_seed",
+                                 "binary", "ternary"):
             raise ValueError(f"unknown communication protocol {self.protocol!r}")
 
 

@@ -1,0 +1,75 @@
+"""Pallas TPU kernels: bit-plane pack / unpack (uint32 word planes).
+
+The quantized wire paths (binary 1-bit, ternary 2-bit — §4.5 / §7.1) ship
+their per-coordinate symbols as packed uint32 words.  These kernels fuse
+the w-bit field packing so HBM traffic is read d·4 bytes, write d·w/8
+bytes (pack) and the reverse (unpack) — the packed plane is exactly what
+travels on the wire.
+
+Layout matches the :mod:`repro.kernels.bitplane.ref` oracle bit-for-bit:
+32/w symbols per word, little-endian fields, row-major over the (BM, 128)
+tile — so flattening the 2D output reproduces the 1D word stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BM_PACK = 256    # (256, 128) u32 in -> (256, 128*w/32) u32 out
+BM_UNPACK = 8    # (8, 128) u32 words in -> (8, 128*32/w) u32 out
+
+
+def _pack_kernel(width, v_ref, o_ref):
+    per = 32 // width
+    v = v_ref[...].astype(jnp.uint32) & jnp.uint32((1 << width) - 1)
+    bm, bn = v.shape
+    v3 = v.reshape(bm, bn // per, per)
+    shifts = (jax.lax.broadcasted_iota(jnp.uint32, (1, 1, per), 2)
+              * jnp.uint32(width))
+    o_ref[...] = jnp.sum(v3 << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_kernel(width, w_ref, o_ref):
+    per = 32 // width
+    w = w_ref[...].astype(jnp.uint32)
+    bm, bn = w.shape
+    shifts = (jax.lax.broadcasted_iota(jnp.uint32, (1, 1, per), 2)
+              * jnp.uint32(width))
+    vals = (w[:, :, None] >> shifts) & jnp.uint32((1 << width) - 1)
+    o_ref[...] = vals.reshape(bm, bn * per)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def pack_bits_2d(vals, width: int, *, interpret: bool = False):
+    """vals: (R, 128) uint32 symbols, R % BM_PACK == 0 -> (R, 128*w/32)."""
+    r, c = vals.shape
+    assert c == LANES and r % BM_PACK == 0, (r, c)
+    out_lanes = LANES * width // 32
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, width),
+        grid=(r // BM_PACK,),
+        in_specs=[pl.BlockSpec((BM_PACK, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM_PACK, out_lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, out_lanes), jnp.uint32),
+        interpret=interpret,
+    )(vals)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def unpack_bits_2d(words, width: int, *, interpret: bool = False):
+    """words: (R, 128) uint32, R % BM_UNPACK == 0 -> (R, 128*32/w) symbols."""
+    r, c = words.shape
+    assert c == LANES and r % BM_UNPACK == 0, (r, c)
+    out_lanes = LANES * (32 // width)
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, width),
+        grid=(r // BM_UNPACK,),
+        in_specs=[pl.BlockSpec((BM_UNPACK, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BM_UNPACK, out_lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, out_lanes), jnp.uint32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,48 @@
+"""jit-friendly wrappers for bit-plane pack/unpack of arbitrary lengths.
+
+TPU -> fused Pallas kernel; CPU -> pure-jnp oracle (``force_pallas=True``
+runs the kernel in interpret mode for equivalence tests).  Both produce the
+identical word stream (verified in tests/test_bitplane.py), so wire buffers
+are portable across backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bitplane import bitplane as _kernel
+from repro.kernels.bitplane import ref as _ref
+
+WIDTHS = _ref.WIDTHS
+num_words = _ref.num_words
+
+
+def pack_bits(vals, width: int, *, force_pallas: bool = False):
+    """Pack (any-shape) unsigned symbols < 2**width into uint32 words.
+
+    Returns (ceil(n*width/32),) uint32 with the ref.py layout.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    flat = jnp.asarray(vals).reshape(-1).astype(jnp.uint32)
+    d = flat.shape[0]
+    if not (on_tpu or force_pallas):
+        return _ref.pack_bits(flat, width)
+    nw = num_words(d, width)
+    tile = _kernel.BM_PACK * _kernel.LANES
+    flat = jnp.pad(flat, (0, (-d) % tile))
+    packed = _kernel.pack_bits_2d(flat.reshape(-1, _kernel.LANES), width,
+                                  interpret=not on_tpu)
+    return packed.reshape(-1)[:nw]
+
+
+def unpack_bits(words, width: int, d: int, *, force_pallas: bool = False):
+    """Inverse of :func:`pack_bits`: (nw,) uint32 words -> (d,) symbols."""
+    on_tpu = jax.default_backend() == "tpu"
+    flat = jnp.asarray(words).reshape(-1)
+    if not (on_tpu or force_pallas):
+        return _ref.unpack_bits(flat, width, d)
+    tile = _kernel.BM_UNPACK * _kernel.LANES
+    flat = jnp.pad(flat, (0, (-flat.shape[0]) % tile))
+    vals = _kernel.unpack_bits_2d(flat.reshape(-1, _kernel.LANES), width,
+                                  interpret=not on_tpu)
+    return vals.reshape(-1)[:d]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for bit-plane packing (the §4.5 wire format made literal).
+
+``pack_bits`` compresses a vector of small unsigned symbols (width w bits
+each, w | 32) into uint32 words, 32/w symbols per word, little-endian within
+the word: symbol j lands in word j // (32/w) at bit offset (j % (32/w)) * w.
+``unpack_bits`` is the exact inverse.  The binary (w=1) and ternary (w=2)
+quantized wire paths in :mod:`repro.core.bitplane` ride these planes.
+
+Symbols must already be masked to w bits; packing is a disjoint-field sum,
+so out-of-range inputs would corrupt neighbouring fields — callers pass
+indicator / branch-index arrays which are in range by construction (the
+kernel and this oracle both mask defensively anyway).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+WORD = 32
+WIDTHS = (1, 2, 4, 8, 16)
+
+
+def num_words(d: int, width: int) -> int:
+    """uint32 words needed for d symbols of ``width`` bits."""
+    assert width in WIDTHS, width
+    per = WORD // width
+    return -(-d // per)
+
+
+def pack_bits(vals, width: int):
+    """(d,) unsigned symbols < 2**width  ->  (ceil(d*width/32),) uint32."""
+    assert width in WIDTHS, width
+    per = WORD // width
+    mask = jnp.uint32((1 << width) - 1)
+    v = vals.reshape(-1).astype(jnp.uint32) & mask
+    d = v.shape[0]
+    npad = (-d) % per
+    v = jnp.pad(v, (0, npad))
+    shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(width)
+    # fields are disjoint, so the sum is a bitwise OR (no carries).
+    return jnp.sum(v.reshape(-1, per) << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words, width: int, d: int):
+    """(nw,) uint32  ->  (d,) uint32 symbols; inverse of :func:`pack_bits`."""
+    assert width in WIDTHS, width
+    per = WORD // width
+    mask = jnp.uint32((1 << width) - 1)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(width)
+    vals = (words.reshape(-1)[:, None] >> shifts) & mask
+    return vals.reshape(-1)[:d]

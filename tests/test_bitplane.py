@@ -1,0 +1,117 @@
+"""Hypothesis property tests for the bit-plane pack/unpack subsystem.
+
+Invariants: bit-exact roundtrip for every field width at arbitrary lengths
+(including non-multiple-of-32 tails), exact word counts, Pallas-kernel-vs-
+ref.py equivalence, and the float<->word tail-slot helpers of the wire
+format (repro.core.bitplane)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import bitplane as core_bp  # noqa: E402
+from repro.kernels.bitplane import ops, ref  # noqa: E402
+
+SET = settings(max_examples=25, deadline=None)
+WIDTH = st.sampled_from(ref.WIDTHS)
+
+
+def _symbols(seed, d, width):
+    return jax.random.randint(jax.random.PRNGKey(seed), (d,), 0,
+                              1 << width).astype(jnp.uint32)
+
+
+# --------------------------------------------------------------------------- #
+# Roundtrip + word-count invariants (ref path).
+# --------------------------------------------------------------------------- #
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 4100), width=WIDTH)
+def test_roundtrip_bit_exact(seed, d, width):
+    v = _symbols(seed, d, width)
+    words = ops.pack_bits(v, width)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (ref.num_words(d, width),)
+    back = ops.unpack_bits(words, width, d)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(v))
+
+
+@SET
+@given(d=st.integers(1, 10_000), width=WIDTH)
+def test_word_count_exact(d, width):
+    per = ref.WORD // width
+    assert ref.num_words(d, width) == -(-d // per) == (d + per - 1) // per
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 1000), width=WIDTH)
+def test_pack_masks_out_of_range_symbols(seed, d, width):
+    """Symbols are masked to the field width: high bits never leak into
+    neighbouring fields."""
+    v = _symbols(seed, d, width)
+    noise = (jax.random.randint(jax.random.PRNGKey(seed + 1), (d,), 0, 1 << 14)
+             .astype(jnp.uint32) << jnp.uint32(width))
+    np.testing.assert_array_equal(np.asarray(ops.pack_bits(v | noise, width)),
+                                  np.asarray(ops.pack_bits(v, width)))
+
+
+# --------------------------------------------------------------------------- #
+# Pallas kernel == ref oracle (interpret mode).
+# --------------------------------------------------------------------------- #
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       d=st.sampled_from([1, 31, 33, 127, 1000, 4097]),
+       width=st.sampled_from([1, 2, 16]))
+def test_pallas_pack_matches_ref(seed, d, width):
+    v = _symbols(seed, d, width)
+    got = ops.pack_bits(v, width, force_pallas=True)
+    want = ref.pack_bits(v, width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       d=st.sampled_from([1, 31, 33, 127, 1000, 4097]),
+       width=st.sampled_from([1, 2, 16]))
+def test_pallas_unpack_matches_ref(seed, d, width):
+    v = _symbols(seed, d, width)
+    words = ref.pack_bits(v, width)
+    got = ops.unpack_bits(words, width, d, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+# --------------------------------------------------------------------------- #
+# Tail-slot float <-> word helpers (wire format).
+# --------------------------------------------------------------------------- #
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 33))
+def test_floats_roundtrip_f32_exact(seed, m):
+    v = jax.random.normal(jax.random.PRNGKey(seed), (m,)) * 10.0
+    w = core_bp.floats_to_words(v, "float32")
+    assert w.shape == (core_bp.float_words(m, "float32"),) == (m,)
+    np.testing.assert_array_equal(
+        np.asarray(core_bp.words_to_floats(w, m, "float32")), np.asarray(v))
+
+
+@SET
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 33))
+def test_floats_roundtrip_bf16_is_bf16_rounding(seed, m):
+    """16-bit wire: roundtrip == one bf16 rounding, two floats per word."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), (m,)) * 10.0
+    w = core_bp.floats_to_words(v, "bfloat16")
+    assert w.shape == (core_bp.float_words(m, "bfloat16"),) == ((m + 1) // 2,)
+    back = core_bp.words_to_floats(w, m, "bfloat16")
+    want = v.astype(jnp.bfloat16).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(want))
+
+
+def test_wire_bits_and_rejects_unsupported():
+    assert core_bp.wire_bits("float32") == 32
+    assert core_bp.wire_bits("bfloat16") == 16
+    with pytest.raises(ValueError):
+        core_bp.wire_bits("float64")

@@ -1,4 +1,12 @@
-"""Communication-cost models (§4): analytic forms + realized == expected."""
+"""Communication-cost models (§4): analytic forms + realized == expected,
+plus the packed bit-plane accounting (HLO-measured gather bits == the
+cost_binary_packed / cost_ternary_packed forms exactly)."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,6 +14,7 @@ import pytest
 
 from repro.core import comm_cost, encoders, types
 
+ROOT = pathlib.Path(__file__).resolve().parent.parent
 KEY = jax.random.PRNGKey(0)
 N, D = 8, 512
 R = 16
@@ -70,6 +79,111 @@ def test_realized_fixed_k_exactly_deterministic():
         enc = encoders.encode_batch(jax.random.PRNGKey(seed), xs, spec)
         got = comm_cost.measure_bits(enc, cspec, D)
         assert got == comm_cost.cost_sparse_seed_fixed_k(N, k, cspec)
+
+
+def test_ternary_cost_closed_form():
+    """§7.1: C = 2nr + 2nd + n·d·p_pass·r, dispatchable via protocol."""
+    spec = types.CommSpec(protocol="ternary", r_bits=R)
+    p_pass = 1.0 / R
+    want = N * 2 * R + 2 * N * D + N * D * p_pass * R
+    assert comm_cost.cost_ternary(N, D, p_pass, spec) == want
+    assert comm_cost.cost(spec, n=N, d=D, p=p_pass) == want
+
+
+def test_packed_costs_bound_ideal_forms():
+    """Word padding is the only overhead of the packed realizations:
+    ideal ≤ packed ≤ ideal + per-node padding slack."""
+    for r in (16, 32):
+        spec_b = types.CommSpec(protocol="binary", r_bits=r)
+        for d in (31, 32, 512, 5000, 1 << 20):
+            ideal = comm_cost.cost_binary(N, d, spec_b)
+            packed = comm_cost.cost_binary_packed(N, d, spec_b)
+            assert ideal <= packed <= ideal + N * 2 * 32
+            p_pass = 0.125
+            cap = comm_cost.bernoulli_capacity(d, p_pass)
+            spec_t = types.CommSpec(protocol="ternary", r_bits=r)
+            idealt = comm_cost.cost_ternary(N, d, p_pass, spec_t)
+            packedt = comm_cost.cost_ternary_packed(N, d, cap, spec_t)
+            sigma = np.sqrt(d * p_pass * (1 - p_pass))
+            assert idealt <= packedt <= idealt + N * (
+                r * (6 * sigma + 1) + 3 * 32) + 1e-6
+            # packed=True dispatch is symmetric across both plane protocols
+            assert packedt == comm_cost.cost(spec_t, n=N, d=d, cap=cap,
+                                             packed=True)
+            assert packed == comm_cost.cost(spec_b, n=N, d=d, packed=True)
+
+
+def test_realized_matches_expected_ternary():
+    """E[measure_bits] == cost_ternary: nsent counts the pass-through
+    (full-precision) branch of Eq. (21)."""
+    p_pass = 0.25
+    xs = jax.random.normal(jax.random.PRNGKey(5), (N, D))
+    spec = types.EncoderSpec(kind="ternary", fraction=p_pass)
+    cspec = types.CommSpec(protocol="ternary", r_bits=R)
+
+    def nsent_one(k):
+        return jnp.sum(encoders.encode_batch(k, xs, spec).nsent)
+    nsent = jax.lax.map(jax.jit(nsent_one), jax.random.split(KEY, 2000))
+    mean_bits = N * 2 * R + 2 * N * D + R * float(jnp.mean(nsent))
+    # one realized sample routed through measure_bits agrees by definition
+    enc = encoders.encode_batch(KEY, xs, spec)
+    assert comm_cost.measure_bits(enc, cspec, D) == (
+        N * 2 * R + 2 * N * D + R * float(jnp.sum(enc.nsent)))
+    want = comm_cost.cost_ternary(N, D, p_pass, cspec)
+    np.testing.assert_allclose(mean_bits, want, rtol=0.02)
+
+
+def test_packed_plane_hlo_bytes_match_accounting():
+    """HLO-measured gather bits of the packed planes == the packed cost
+    forms EXACTLY — and, mirroring the PR-1 capacity accounting test,
+    with NO seed-bit deduction: binary/ternary branch choices are
+    data-dependent, so the plane travels instead of a §4.4 seed."""
+    inner = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import functools, json, re
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import collectives, types
+
+N, D = 8, 5000
+mesh = jax.make_mesh((N,), ("data",))
+out = {}
+for kind in ("binary", "ternary"):
+    cfg = types.CompressionConfig(
+        encoder=types.EncoderSpec(kind=kind, fraction=0.125, center="min"),
+        mode="gather_decode", axes=("data",), wire_dtype="float32",
+        min_compress_size=0)
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+                       out_specs=P(), check_vma=False)
+    def f(xs, key):
+        return collectives.compressed_mean(xs.reshape(D), key, cfg)
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((N, D), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32)).compile().as_text()
+    ws = [int(m.group(1)) for m in
+          re.finditer(r"u32\[8,(\d+)\]\{[^}]*\} all-gather", txt)]
+    out[kind] = {"gathered_words": ws}
+print(json.dumps(out))
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", inner], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    got = json.loads(res.stdout.strip().splitlines()[-1])
+    n, d = 8, 5000
+    spec32 = types.CommSpec(protocol="binary", r_bits=32)
+    # binary: one gather of exactly cost_binary_packed bits, no seed term.
+    (wb,) = got["binary"]["gathered_words"]
+    assert n * wb * 32 == comm_cost.cost_binary_packed(n, d, spec32)
+    # ternary: likewise with the capacity-padded value segment.
+    cap = comm_cost.bernoulli_capacity(d, 0.125)
+    (wt,) = got["ternary"]["gathered_words"]
+    assert n * wt * 32 == comm_cost.cost_ternary_packed(
+        n, d, cap, types.CommSpec(protocol="ternary", r_bits=32))
 
 
 def test_table1_cost_column():

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import decoders, encoders, mse
+from repro.core import bitplane, comm_cost, decoders, encoders, mse
 
 KEY = jax.random.PRNGKey(0)
 N, D = 8, 64
@@ -114,6 +114,44 @@ def test_ternary_printed_lemma72_fails_sanity():
     assert printed > 0  # the printed formula is wrong here…
     corrected = float(mse.mse_ternary(xs, 0.5, 0.0, c1, c2))
     assert corrected == pytest.approx(0.0, abs=1e-9)  # …ours is exact.
+
+
+def test_binary_wire_path_matches_example4():
+    """The packed 1-bit-plane *wire path* (pack → gather → unpack →
+    average, repro.core.bitplane) has Example 4's exact MSE and respects
+    the [10, Thm 1] bound — not just the dense encoder."""
+    def sample(k):
+        ks = _node_keys(k)
+
+        def one(kk, x):
+            buf = bitplane.binary_pack(x, kk, "float32")
+            return bitplane.binary_unpack(buf, D, "float32")
+        return jax.vmap(one)(ks, XS)
+    got, se = _mc_mse(sample)
+    want = float(mse.mse_binary(XS))
+    assert abs(got - want) < max(5 * se, 0.02 * want), (got, want, se)
+    assert got <= float(mse.mse_binary_bound(XS)) * 1.05
+
+
+def test_ternary_wire_path_matches_eq21():
+    """The packed 2-bit-plane wire path has the (corrected) Lemma 7.2 MSE
+    of Eq. (21) with c1/c2 = per-node min/max, p1 = p2 = (1 − p_pass)/2."""
+    p_pass = 0.25
+    half = (1.0 - p_pass) / 2.0
+    cap = comm_cost.bernoulli_capacity(D, p_pass)
+
+    def sample(k):
+        ks = _node_keys(k)
+
+        def one(kk, x):
+            buf = bitplane.ternary_pack(x, kk, p_pass, cap, "float32")
+            return bitplane.ternary_unpack(buf, D, cap, "float32")
+        return jax.vmap(one)(ks, XS)
+    got, se = _mc_mse(sample)
+    c1s = jnp.min(XS, axis=-1)
+    c2s = jnp.max(XS, axis=-1)
+    want = float(mse.mse_ternary(XS, half, half, c1s, c2s))
+    assert abs(got - want) < max(5 * se, 0.03 * want), (got, want, se)
 
 
 def test_table1_mse_columns():

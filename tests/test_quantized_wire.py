@@ -1,0 +1,193 @@
+"""Single-device tests of the packed bit-plane binary/ternary wire paths
+(repro.core.bitplane): pack→unpack equivalence against the dense encoders,
+overflow handling, preset plumbing — plus the multi-device subprocess check
+(distributed_checks/quantized_wire_check.py)."""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import bitplane, comm_cost, encoders, types
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+D = 5000  # not a multiple of 32: exercises the plane tail
+
+
+def _x(seed=0, d=D):
+    return jax.random.normal(jax.random.PRNGKey(seed), (d,)) * 0.7
+
+
+# --------------------------------------------------------------------------- #
+# Wire pack/unpack == dense encoder output.
+# --------------------------------------------------------------------------- #
+
+def test_binary_wire_matches_encoder_bit_exact():
+    """f32 wire: the packed plane reproduces encode_binary per key."""
+    x = _x().astype(jnp.float32)
+    for s in range(5):
+        key = jax.random.PRNGKey(100 + s)
+        buf = bitplane.binary_pack(x, key, "float32")
+        assert buf.dtype == jnp.uint32
+        assert buf.shape == (bitplane.binary_wire_words(D, "float32"),)
+        y = bitplane.binary_unpack(buf, D, "float32")
+        enc = encoders.encode_binary(key, x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(enc.y))
+
+
+def test_binary_wire_bf16_rounds_centers_only():
+    """bf16 wire: the plane is exact; only vmin/vmax are bf16-rounded."""
+    x = _x(1).astype(jnp.float32)
+    key = jax.random.PRNGKey(3)
+    y = bitplane.binary_unpack(bitplane.binary_pack(x, key, "bfloat16"), D,
+                               "bfloat16")
+    enc = encoders.encode_binary(key, x)
+    vmin16 = enc.extras["vmin"].astype(jnp.bfloat16).astype(jnp.float32)
+    vmax16 = enc.extras["vmax"].astype(jnp.bfloat16).astype(jnp.float32)
+    want = jnp.where(enc.support, vmax16, vmin16)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+
+
+def test_ternary_wire_matches_encoder():
+    """f32 wire: the 2-bit plane + value segment reproduce encoders.encode
+    (kind='ternary') per key, at full capacity."""
+    x = _x(2).astype(jnp.float32)
+    p_pass = 0.125
+    cap = comm_cost.bernoulli_capacity(D, p_pass)
+    spec = types.EncoderSpec(kind="ternary", fraction=p_pass)
+    for s in range(5):
+        key = jax.random.PRNGKey(200 + s)
+        buf = bitplane.ternary_pack(x, key, p_pass, cap, "float32")
+        assert buf.shape == (bitplane.ternary_wire_words(D, cap, "float32"),)
+        y = bitplane.ternary_unpack(buf, D, cap, "float32")
+        enc = encoders.encode(key, x, spec)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(enc.y))
+
+
+def test_ternary_overflow_drops_symmetrically():
+    """cap < |pass-through set|: encoder drops overflow ranks, decoder
+    substitutes (c1+c2)/2 for exactly those ranks — never misaligns."""
+    x = _x(3).astype(jnp.float32)
+    p_pass = 0.5
+    cap = 16  # far below E[|pass|] = 2500: massive forced overflow
+    key = jax.random.PRNGKey(7)
+    buf = bitplane.ternary_pack(x, key, p_pass, cap, "float32")
+    y = np.asarray(bitplane.ternary_unpack(buf, D, cap, "float32"))
+    enc = encoders.encode(key, x, types.EncoderSpec(kind="ternary",
+                                                    fraction=p_pass))
+    sent = np.asarray(enc.support)
+    pos = np.cumsum(sent) - 1
+    kept = sent & (pos < cap)
+    np.testing.assert_array_equal(y[~sent], np.asarray(enc.y)[~sent])
+    np.testing.assert_array_equal(y[kept], np.asarray(enc.y)[kept])
+    c_mid = 0.5 * float(jnp.min(x) + jnp.max(x))
+    np.testing.assert_allclose(y[sent & ~kept], c_mid, rtol=1e-6)
+    assert int(kept.sum()) == cap  # buffer fully used before dropping
+
+
+# --------------------------------------------------------------------------- #
+# Wire-bit accounting follows the real dispatch rule.
+# --------------------------------------------------------------------------- #
+
+def test_bucket_wire_bits_tracks_dispatch():
+    """bucket_wire_bits must charge what compressed_mean actually ships:
+    packed words for the plane paths, dense f32 for configs that fall back
+    to dense_sim (gather_wire_kind is the single source of truth)."""
+    from repro.core import collectives
+    from repro.train import bucketing
+
+    n = 8
+    shapes = {"a": (4096,), "b": (4096,)}
+    specs = {name: (None,) for name in shapes}
+
+    def mk(**enc):
+        return types.CompressionConfig(
+            encoder=types.EncoderSpec(**enc), mode="gather_decode",
+            axes=("data",), wire_dtype="float32", min_compress_size=1024)
+
+    # packed binary: n * 32 * wire words per bucket
+    cfg = mk(kind="binary", center="min")
+    assert collectives.gather_wire_kind(cfg) == "binary"
+    plan = bucketing.build_plan(shapes, specs, ("data",), {"data": n}, cfg)
+    by_bid = {b.bid: b for b in plan.buckets}
+    for bid, bits in bucketing.bucket_wire_bits(plan, cfg, n).items():
+        want = n * 32 * bitplane.binary_wire_words(by_bid[bid].size,
+                                                   "float32")
+        assert bits == want
+
+    # ternary with §6 optimal probs: dispatch falls back to dense_sim,
+    # so the accounting must charge the full n·d·32 dense bits.
+    cfg = mk(kind="ternary", fraction=0.125, probs="optimal")
+    assert collectives.gather_wire_kind(cfg) == "dense"
+    plan = bucketing.build_plan(shapes, specs, ("data",), {"data": n}, cfg)
+    by_bid = {b.bid: b for b in plan.buckets}
+    for bid, bits in bucketing.bucket_wire_bits(plan, cfg, n).items():
+        assert bits == n * by_bid[bid].size * 32
+
+    # bernoulli with optimal center likewise rides the dense simulation
+    cfg = mk(kind="bernoulli", fraction=0.125, center="optimal")
+    assert collectives.gather_wire_kind(cfg) == "dense"
+
+    # error feedback overrides the encoder kind: every compressed bucket
+    # ships the fixed-k EF wire buffer (kb·BLOCK values + μ)
+    cfg = dataclasses.replace(mk(kind="binary", center="min"),
+                              error_feedback=True)
+    plan = bucketing.build_plan(shapes, specs, ("data",), {"data": n}, cfg)
+    by_bid = {b.bid: b for b in plan.buckets}
+    for bid, bits in bucketing.bucket_wire_bits(plan, cfg, n).items():
+        want = n * collectives.fixed_k_wire_slots(
+            by_bid[bid].size, cfg.encoder.fraction) * 32
+        assert bits == want
+
+    # non-gather modes have no gather wire to account
+    cfg_none = types.CompressionConfig(mode="none")
+    plan = bucketing.build_plan(shapes, specs, ("data",), {"data": n},
+                                cfg_none)
+    assert bucketing.bucket_wire_bits(plan, cfg_none, n) == {}
+
+
+# --------------------------------------------------------------------------- #
+# Registry presets exercise the packed wire paths.
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name,kind,mode", [
+    ("binary_packed", "binary", "gather_decode"),
+    ("ternary_packed", "ternary", "gather_decode"),
+    ("bernoulli_seed_1bit", "bernoulli", "gather_decode"),
+    ("fixed_k_1bit", "fixed_k", "shared_support"),
+])
+def test_compression_presets(name, kind, mode):
+    cfg = registry.compression_preset(name)
+    assert cfg.encoder.kind == kind and cfg.mode == mode
+    assert registry.compression_preset(name, axes=("data",)).axes == ("data",)
+    run = registry.get_run_config("qwen3-4b", "train_4k", compression=name)
+    assert run.compression.encoder.kind == kind
+    assert run.compression.axes == ("data",)
+
+
+def test_compression_preset_unknown_raises():
+    with pytest.raises(KeyError):
+        registry.compression_preset("no_such_preset")
+
+
+# --------------------------------------------------------------------------- #
+# Multi-device behavior (subprocess: 8 fake CPU devices).
+# --------------------------------------------------------------------------- #
+
+def test_quantized_wire_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # the script sets its own
+    res = subprocess.run(
+        [sys.executable,
+         str(ROOT / "tests" / "distributed_checks" / "quantized_wire_check.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL QUANTIZED WIRE CHECKS PASSED" in res.stdout

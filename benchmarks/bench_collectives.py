@@ -1,17 +1,24 @@
-"""Wire bytes of the compressed-mean collective vs exact pmean, measured
-from lowered HLO on an 8-device mesh (subprocess: device count is locked at
-first jax init, and benchmarks must see 1 device by default).
+"""Wire bytes + step time of the compressed-mean collective per registry
+preset, measured from lowered HLO and timed execution on an 8-device mesh
+(subprocess: device count is locked at first jax init, and benchmarks must
+see 1 device by default).
 
-Two byte conventions are reported per mode:
+The preset sweep comes from repro.configs.registry.COMPRESSION_PRESETS —
+i.e. the same codec registry the production dispatch consults — plus three
+reference points ("none" exact, "fixed_k_gather", "binary_dense" dense
+simulation).  Two byte conventions are reported per preset:
 
 * ``wire_bytes`` — ring-adjusted per-device wire traffic (hlo_cost's
   roofline convention: all-reduce pays 2·b·(s−1)/s, all-gather b·(s−1)/s);
 * ``payload_bytes`` — the star-protocol payload Σ_i |message_i| that the
   paper's C sums charge (all-gather: the gathered result size; all-reduce:
-  n × the reduced buffer).  The packed bit-plane modes must match
-  ``comm_cost`` accounting exactly in this convention, and binary must
-  undercut the dense f32 simulation ≥ 8× (it lands at ~32×: 1 bit vs 32
-  bits per coordinate).
+  n × the reduced buffer).  Every preset's payload must equal the resolved
+  codec's ``wire_bits`` accounting exactly, binary must undercut the dense
+  f32 simulation ≥ 8× (it lands at ~32×), and the §7.2 rotated presets
+  must cost exactly their un-rotated codec's payload (seed-only overhead).
+
+:func:`collect` is the machine-readable entry point benchmarks/run.py uses
+to emit BENCH_collectives.json.
 """
 from __future__ import annotations
 
@@ -25,79 +32,149 @@ import time
 _INNER = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import functools, json
+import dataclasses, functools, json, re, time
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro import compat
-from repro.core import collectives, comm_cost, types
+from repro.configs import registry as cfg_registry
+from repro.core import collectives, types, wire
 from repro.launch import hlo_cost
 
 mesh = jax.make_mesh((8,), ("data",))
 N = 8
-D = 1 << 20
-MODES = {
-    "none": ("none", types.EncoderSpec(kind="fixed_k", fraction=1.0)),
-    "shared_support": ("shared_support",
-                       types.EncoderSpec(kind="fixed_k", fraction=1/16)),
-    "gather_decode": ("gather_decode",
-                      types.EncoderSpec(kind="fixed_k", fraction=1/16)),
-    "binary_dense": ("dense_sim", types.EncoderSpec(kind="binary")),
-    "binary_packed": ("gather_decode", types.EncoderSpec(kind="binary")),
-    "ternary_packed": ("gather_decode",
-                       types.EncoderSpec(kind="ternary", fraction=1/16)),
-}
-res = {}
-for name, (mode, enc) in MODES.items():
-    cfg = types.CompressionConfig(encoder=enc, mode=mode, axes=("data",),
-                                  min_compress_size=0)
+D = int(os.environ.get("BENCH_D", 1 << 20))
+REPS = int(os.environ.get("BENCH_REPS", 3))
+
+def preset_cfgs():
+    out = {"none": types.CompressionConfig(mode="none")}
+    for name in sorted(cfg_registry.COMPRESSION_PRESETS):
+        out[name] = cfg_registry.compression_preset(name, axes=("data",))
+    # reference points: the fixed-k star path and the dense simulation.
+    out["fixed_k_gather"] = dataclasses.replace(
+        out["fixed_k_1bit"], mode="gather_decode")
+    out["binary_dense"] = dataclasses.replace(
+        out["binary_packed"], mode="dense_sim")
+    # f32 wire for the sweep: the CPU backend lowers bf16 collectives at
+    # f32 (the measured bytes would be 2x the bf16 accounting), so the
+    # payload==accounting equality is only byte-exact at f32 — same
+    # normalization as tests/distributed_checks/*.  TPU keeps bf16 native;
+    # the shipped presets themselves stay bf16.
+    return {k: dataclasses.replace(v, min_compress_size=0,
+                                   wire_dtype="float32")
+            for k, v in out.items()}
+
+res = {"schema": 1, "n": N, "d": D, "wire_dtype": "float32", "presets": {}}
+xs = jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32) * 0.3
+key = jax.random.PRNGKey(1)
+for name, cfg in preset_cfgs().items():
     @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
                        out_specs=P(), check_vma=False)
-    def f(xs, key):
-        return collectives.compressed_mean(xs.reshape(D), key, cfg)
-    lowered = jax.jit(f).lower(
-        jax.ShapeDtypeStruct((8, D), jnp.float32),
-        jax.ShapeDtypeStruct((2,), jnp.uint32))
-    comp = lowered.compile()
-    hc = hlo_cost.analyze_text(comp.as_text())
-    # star payload: undo the per-op ring factors (group size 8).
-    payload = (hc.coll_bytes_by_op.get("all-gather", 0.0) / (7 / 8)
-               + hc.coll_bytes_by_op.get("all-reduce", 0.0)
-               / (2 * 7 / 8) * N)
-    res[name] = {"wire_bytes": hc.coll_wire_bytes,
-                 "payload_bytes": payload,
-                 "ops": {k: round(v) for k, v in hc.coll_exec.items()}}
-
-# comm_cost accounting for the packed planes (bf16 wire -> r = 16).
-spec16 = types.CommSpec(protocol="binary", r_bits=16)
-res["_expect"] = {
-    "binary_packed": comm_cost.cost_binary_packed(N, D, spec16) / 8,
-    "ternary_packed": comm_cost.cost_ternary_packed(
-        N, D, comm_cost.bernoulli_capacity(D, 1/16), spec16) / 8,
-}
+    def f(x, k):
+        return collectives.compressed_mean(x.reshape(D), k, cfg)
+    fj = jax.jit(f)
+    comp = fj.lower(jax.ShapeDtypeStruct((N, D), jnp.float32),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
+    txt = comp.as_text()
+    hc = hlo_cost.analyze_text(txt)
+    # star payload Σ_i |message_i|, read straight off the collective result
+    # shapes (all-gather: the gathered result; all-reduce: N × the reduced
+    # buffer).  Deliberately NOT via hlo_cost's ring bytes: those apply the
+    # TPU-normalization heuristics of DESIGN.md §6 (large f32 gathers are
+    # assumed to be CPU-legalized bf16 and charged half), which would
+    # misprice this sweep's genuine f32 wire buffers.
+    nbytes = {"f32": 4, "u32": 4, "bf16": 2}
+    payload = 0.0
+    for dt, dims, op in re.findall(
+            r"= (f32|u32|bf16)\[([\d,]+)\]\S* (all-gather|all-reduce)"
+            r"(?:-start)?\(", txt):
+        b = nbytes[dt]
+        for x in dims.split(","):
+            b *= int(x)
+        payload += b * (N if op == "all-reduce" else 1)
+    fj(xs, key).block_until_ready()  # warm
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fj(xs, key)
+    out.block_until_ready()
+    step_us = (time.perf_counter() - t0) / REPS * 1e6
+    entry = {"wire_bytes": hc.coll_wire_bytes, "payload_bytes": payload,
+             "step_time_us": step_us,
+             "ops": {k: round(v) for k, v in hc.coll_exec.items()}}
+    if cfg.mode != "none":
+        codec = wire.resolve(cfg)
+        entry["codec"] = codec.name
+        entry["accounted_payload_bytes"] = codec.wire_bits(N, D, cfg) / 8
+    res["presets"][name] = entry
 print(json.dumps(res))
 """
 
 
-def rows():
+_CACHE: dict = {}
+
+
+def collect(d: int | None = None, reps: int = 3, timeout: int = 900) -> dict:
+    """Run the 8-device sweep in a subprocess; returns the JSON payload.
+
+    Memoized per (d, reps) so run.py's CSV rows and JSON record share one
+    sweep.
+    """
+    if (d, reps) in _CACHE:
+        return _CACHE[(d, reps)]
     root = pathlib.Path(__file__).resolve().parent.parent
     env = dict(os.environ)
     env["PYTHONPATH"] = str(root / "src")
     env.pop("XLA_FLAGS", None)
-    t0 = time.perf_counter()
+    if d is not None:
+        env["BENCH_D"] = str(d)
+    env["BENCH_REPS"] = str(reps)
     proc = subprocess.run([sys.executable, "-c", _INNER], env=env,
-                          capture_output=True, text=True, timeout=600)
-    dt = (time.perf_counter() - t0) * 1e6
+                          capture_output=True, text=True, timeout=timeout)
     if proc.returncode != 0:
-        return [{"name": "collectives.wire_bytes", "us_per_call": dt,
-                 "derived": f"FAILED: {proc.stderr[-300:]}", "check": False}]
+        raise RuntimeError(f"bench_collectives subprocess failed:\n"
+                           f"{proc.stderr[-2000:]}")
     res = json.loads(proc.stdout.strip().splitlines()[-1])
-    exact = res["none"]["wire_bytes"]
-    shared = res["shared_support"]["wire_bytes"]
-    gather = res["gather_decode"]["wire_bytes"]
-    dense_pl = res["binary_dense"]["payload_bytes"]
-    bin_pl = res["binary_packed"]["payload_bytes"]
-    tern_pl = res["ternary_packed"]["payload_bytes"]
-    expect = res["_expect"]
+    _CACHE[(d, reps)] = res
+    return res
+
+
+def check_payload_accounting(res: dict) -> list:
+    """Presets whose HLO payload ≠ the codec registry's wire_bits (must be
+    empty), plus the §7.2 seed-only-overhead equalities."""
+    bad = []
+    presets = res["presets"]
+    for name, e in presets.items():
+        if "accounted_payload_bytes" in e and \
+                e["payload_bytes"] != e["accounted_payload_bytes"]:
+            bad.append(f"{name}: payload={e['payload_bytes']:.0f}B "
+                       f"!= accounting={e['accounted_payload_bytes']:.0f}B")
+    for rot, plain in (("rotated_binary", "binary_packed"),
+                       ("rotated_fixed_k", "fixed_k_gather")):
+        # d is a power of two in this bench → payloads must be equal.
+        if presets[rot]["payload_bytes"] != presets[plain]["payload_bytes"]:
+            bad.append(f"{rot}: payload != {plain} "
+                       f"({presets[rot]['payload_bytes']:.0f} vs "
+                       f"{presets[plain]['payload_bytes']:.0f})")
+    return bad
+
+
+def rows():
+    t0 = time.perf_counter()
+    try:
+        res = collect()
+    except RuntimeError as e:
+        dt = (time.perf_counter() - t0) * 1e6
+        return [{"name": "collectives.wire_bytes", "us_per_call": dt,
+                 "derived": f"FAILED: {str(e)[-300:]}", "check": False}]
+    dt = (time.perf_counter() - t0) * 1e6
+    p = res["presets"]
+    exact = p["none"]["wire_bytes"]
+    shared = p["fixed_k_1bit"]["wire_bytes"]
+    gather = p["fixed_k_gather"]["wire_bytes"]
+    dense_pl = p["binary_dense"]["payload_bytes"]
+    bin_pl = p["binary_packed"]["payload_bytes"]
+    tern_pl = p["ternary_packed"]["payload_bytes"]
+    rot_pl = p["rotated_binary"]["payload_bytes"]
+    bad = check_payload_accounting(res)
     return [
         {
             "name": "collectives.wire_bytes",
@@ -114,14 +191,20 @@ def rows():
             "derived": (f"dense_sim={dense_pl:.3e}B binary={bin_pl:.3e}B "
                         f"(x{dense_pl / max(bin_pl, 1):.1f} less) "
                         f"ternary={tern_pl:.3e}B "
-                        f"(x{dense_pl / max(tern_pl, 1):.1f}); "
-                        f"ring-wire binary={res['binary_packed']['wire_bytes']:.3e}B"
-                        f" vs dense={res['binary_dense']['wire_bytes']:.3e}B"),
+                        f"(x{dense_pl / max(tern_pl, 1):.1f})"),
             # ≥8x payload reduction for the packed 1-bit plane vs the dense
-            # f32 simulation, and both packed modes must match comm_cost
-            # accounting exactly.
-            "check": (bin_pl * 8 <= dense_pl
-                      and bin_pl == expect["binary_packed"]
-                      and tern_pl == expect["ternary_packed"]),
+            # f32 simulation.
+            "check": bin_pl * 8 <= dense_pl,
+        },
+        {
+            "name": "collectives.registry_accounting",
+            "us_per_call": dt,
+            "derived": (f"{len(p)} presets; rotated_binary={rot_pl:.3e}B "
+                        f"(== binary_packed: {rot_pl == bin_pl}); "
+                        + ("; ".join(bad) if bad else "payload==wire_bits "
+                           "for every codec-backed preset")),
+            # every preset's HLO payload equals the codec registry's
+            # accounting; rotated presets cost exactly their inner codec.
+            "check": not bad,
         },
     ]

@@ -1,17 +1,94 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (plus a check column); exits
-non-zero if any paper-invariant check fails.
+Default run prints ``name,us_per_call,derived`` CSV (plus a check column)
+for every bench module AND writes ``BENCH_collectives.json`` — the
+machine-readable per-preset payload-bytes + step-time record that the perf
+trajectory tracks across PRs.  Exits non-zero if any paper-invariant check
+fails.
+
+``--smoke`` runs only the JSON-emitting collectives sweep at a small
+dimension and validates the schema — the CI guard against schema breakage
+(fast: no Table-1/tradeoff Monte Carlo).
+
+Flags:
+  --smoke        small-d collectives sweep + schema check only
+  --json PATH    where to write the JSON record (default:
+                 BENCH_collectives.json in the repo root)
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import sys
 
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; make the `benchmarks` package importable regardless of cwd.
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(_ROOT) not in sys.path:
+    sys.path.insert(0, str(_ROOT))
 
-def main() -> None:
-    from benchmarks import (bench_bucketing, bench_collectives,
-                            bench_encode_speed, bench_quantization,
-                            bench_table1, bench_tradeoff)
+SCHEMA_REQUIRED = {"schema", "n", "d", "presets"}
+PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
+# presets that must be present for the trajectory to stay comparable.
+CORE_PRESETS = {"none", "fixed_k_1bit", "bernoulli_seed_1bit",
+                "binary_packed", "ternary_packed", "rotated_binary",
+                "rotated_fixed_k", "fixed_k_gather", "binary_dense"}
+
+
+def validate_schema(res: dict) -> list:
+    """Schema violations in a collectives JSON record (empty == valid)."""
+    bad = []
+    missing = SCHEMA_REQUIRED - set(res)
+    if missing:
+        bad.append(f"missing top-level keys: {sorted(missing)}")
+        return bad
+    if res["schema"] != 1:
+        bad.append(f"unknown schema version {res['schema']}")
+    missing_presets = CORE_PRESETS - set(res["presets"])
+    if missing_presets:
+        bad.append(f"missing presets: {sorted(missing_presets)}")
+    for name, e in res["presets"].items():
+        miss = PRESET_REQUIRED - set(e)
+        if miss:
+            bad.append(f"preset {name}: missing {sorted(miss)}")
+        elif not (e["payload_bytes"] > 0 and e["step_time_us"] > 0):
+            bad.append(f"preset {name}: non-positive measurements {e}")
+    return bad
+
+
+def write_collectives_json(path: pathlib.Path, res: dict) -> list:
+    from benchmarks import bench_collectives
+    bad = validate_schema(res) + bench_collectives.check_payload_accounting(res)
+    path.write_text(json.dumps(res, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path} ({len(res['presets'])} presets, d={res['d']})",
+          file=sys.stderr)
+    return bad
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast schema-checked collectives sweep only")
+    ap.add_argument("--json", type=pathlib.Path,
+                    default=pathlib.Path(__file__).resolve().parent.parent
+                    / "BENCH_collectives.json")
+    args = ap.parse_args(argv)
+
+    from benchmarks import bench_collectives
+
+    if args.smoke:
+        res = bench_collectives.collect(d=1 << 16, reps=1)
+        res["smoke"] = True
+        failed = write_collectives_json(args.json, res)
+        if failed:
+            print(f"FAILED smoke checks: {failed}", file=sys.stderr)
+            sys.exit(1)
+        print("BENCH smoke OK")
+        return
+
+    from benchmarks import (bench_bucketing, bench_encode_speed,
+                            bench_quantization, bench_table1, bench_tradeoff)
     mods = [bench_table1, bench_tradeoff, bench_quantization,
             bench_encode_speed, bench_collectives, bench_bucketing]
     print("name,us_per_call,derived,check")
@@ -23,6 +100,13 @@ def main() -> None:
                   f"{'ok' if ok else 'FAIL'}")
             if not ok:
                 failed.append(r["name"])
+    try:
+        # memoized: reuses the sweep bench_collectives.rows() already ran.
+        res = bench_collectives.collect()
+    except RuntimeError as e:
+        failed.append(f"collectives.json: {str(e)[-300:]}")
+    else:
+        failed += write_collectives_json(args.json, res)
     if failed:
         print(f"FAILED checks: {failed}", file=sys.stderr)
         sys.exit(1)

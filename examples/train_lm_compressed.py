@@ -49,7 +49,21 @@ def run(steps: int, compression: core_types.CompressionConfig, label: str):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--preset", default=None,
+                    help="run a named wire preset from "
+                         "repro.configs.registry.COMPRESSION_PRESETS "
+                         "(e.g. rotated_binary) instead of the default "
+                         "exact-vs-fixed-k comparison")
     args = ap.parse_args()
+
+    if args.preset:
+        from repro.configs import registry
+        cfg = dataclasses.replace(
+            registry.compression_preset(args.preset, axes=("data",)),
+            min_compress_size=1024)
+        hist = run(args.steps, cfg, f"preset {args.preset}")
+        print(f"\nfinal loss — {args.preset}: {hist[-1]['loss']:.4f}")
+        return
 
     exact = run(args.steps, core_types.CompressionConfig(mode="none"),
                 "exact gradient mean (baseline)")

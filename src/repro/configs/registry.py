@@ -74,6 +74,19 @@ COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
         encoder=core_types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
                                        center="min"),
         mode="gather_decode", axes=("pod",)),
+    # §7.2: seeded per-bucket Hadamard rotation composed onto the packed
+    # 1-bit plane (Suresh et al.'s rotated one-bit estimator / DRIVE's
+    # backbone) — payload identical to binary_packed at power-of-two
+    # bucket sizes, wire overhead is the rotation seed only.
+    "rotated_binary": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="binary", center="min",
+                                       rotation=True),
+        mode="gather_decode", axes=("pod",)),
+    # §7.2 rotation composed onto the fixed-k seed-trick gather path.
+    "rotated_fixed_k": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1.0 / 16,
+                                       center="mean", rotation=True),
+        mode="gather_decode", axes=("pod",)),
 }
 
 

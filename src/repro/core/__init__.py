@@ -3,3 +3,4 @@ from repro.core.types import (  # noqa: F401
     CommSpec, CompressionConfig, EncoderSpec, fixed_k_from_fraction)
 from repro.core.protocol import EstimateReport, MeanEstimator, empirical_mse  # noqa: F401
 from repro.core.collectives import compressed_mean, partial_mean  # noqa: F401
+from repro.core.wire import WireCodec  # noqa: F401

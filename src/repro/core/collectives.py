@@ -1,386 +1,152 @@
-"""Compressed mean estimation as a mesh collective (DESIGN.md §2).
+"""Compressed mean estimation as a mesh collective (docs/DESIGN.md §2–§3).
 
 These functions run *inside* ``jax.shard_map`` with the compression axes
 manual.  They replace an exact ``pmean`` over those axes by the paper's
-encode → communicate → decode pipeline:
+encode → communicate → decode pipeline.
 
-* ``gather_decode``  — faithful star protocol (§2, §4.4): each node encodes
-  independently (Def. 2.1, via fold_in(axis_index)); the compressed wire
-  payloads are all_gathered; every node runs the averaging decoder locally.
-  The §4.4 seed trick is realized for free: peers regenerate each other's
-  support sets from the shared per-step key + peer index, so only values
-  (and the μ_i scalars) hit the wire.
+Since the WireCodec refactor the per-protocol wire formats live in
+:mod:`repro.core.wire` — each protocol is a registered codec declaring
+``pack``/``unpack``/``wire_slots``/``wire_bits`` and its reduce kind — and
+:func:`compressed_mean` is a thin dispatcher over ``wire.resolve(cfg)``:
 
-* ``shared_support`` — TPU-native variant: one support set for all nodes
-  (shared seed), so the averaged wire values can ride a plain psum of a
+* ``fixed_k`` (gather_decode) — faithful star protocol (§2, §4.4): each
+  node encodes independently (Def. 2.1, via fold_in(axis_index)); the
+  compressed wire payloads are all_gathered; every node runs the averaging
+  decoder locally.  The §4.4 seed trick is realized for free: peers
+  regenerate each other's support sets from the shared per-step key + peer
+  index, so only values (and the μ_i scalars) hit the wire.
+
+* ``fixed_k_shared`` — TPU-native variant: one support set for all nodes
+  (shared seed), so the averaged wire values ride a plain psum of a
   length-k buffer (ring-bandwidth optimal).  MSE closed form:
   :func:`repro.core.mse.mse_fixed_k_shared`.
 
-* ``bernoulli wire`` — real §4.4 wire path for the variable-size-support
-  encoder (Eq. (1), uniform p): the support S_i = {j : u_j < p} depends
-  only on the node's PRNG stream, so peers regenerate it from
-  fold_in(key, rank) and only a capacity-padded value buffer (cap ≈ p·d
-  plus slack, :func:`repro.core.comm_cost.bernoulli_capacity`) plus μ_i
-  travels — honest sub-d wire traffic instead of the dense simulation.
+* ``bernoulli`` — real §4.4 wire path for the variable-size-support
+  encoder (Eq. (1), uniform p): supports regenerate from fold_in(key,
+  rank) and only a capacity-padded value buffer plus μ_i travels.
 
-* ``binary / ternary wire`` — packed bit-plane wire paths (§4.5 Eq. (11) /
-  §7.1 Eq. (21)): each node ships a 1-bit (binary) or 2-bit (ternary)
-  symbol plane packed into uint32 words, with centers — and, for ternary,
-  a capacity-padded pass-through value segment — fused into the same
-  buffer (:mod:`repro.core.bitplane`).  The branch choices are
-  data-dependent so the plane travels explicitly (no §4.4 seed trick);
-  the wire is ~d bits/node instead of 32·d.
+* ``binary`` / ``ternary`` — packed bit-plane wire paths (§4.5 Eq. (11) /
+  §7.1 Eq. (21)): a 1-bit (binary) or 2-bit (ternary) symbol plane packed
+  into uint32 words, with centers — and, for ternary, a capacity-padded
+  pass-through value segment — fused into the same buffer
+  (:mod:`repro.core.bitplane`).
 
-* ``dense_sim``      — encode per node, exact pmean of the dense encoded
-  vectors: bit-identical estimates to gather_decode with no wire savings;
-  supports every encoder (incl. the §6 optimal-probability policies) and
-  is used for correctness tests and MSE studies under shard_map.
+* ``dense`` — encode per node, exact pmean of the dense encoded vectors:
+  bit-identical estimates to gather_decode with no wire savings; supports
+  every encoder (incl. the §6 optimal-probability policies).
 
-Wire fusion: every mode ships the μ_i scalar *inside* the value buffer
-(one concatenated collective per call) so a bucketed train step issues
-exactly one collective launch per bucket (repro.train.bucketing).
+* ``rotated_*`` — any of the above composed with the §7.2 seeded
+  per-bucket Hadamard rotation (:mod:`repro.core.wire.rotated`): rotate
+  once before encode, unrotate once after the averaging decode, seed-only
+  wire overhead.  Activated by ``cfg.encoder.rotation``.
+
+Wire fusion: every mode ships the per-node scalars *inside* the value
+buffer (one concatenated collective per call) so a bucketed train step
+issues exactly one collective launch per bucket (repro.train.bucketing).
 
 All functions take and return a single flat f32 vector; pytree plumbing
 lives in repro.train (grad flattening / bucketing / per-leaf policies).
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro import compat
-from repro.core import bitplane
-from repro.core import comm_cost
-from repro.core import encoders
 from repro.core import types as t
-from repro.kernels.fixed_k_encode import ops as fk
+from repro.core import wire
+from repro.core.wire import base as _wire_base
+from repro.core.wire import codecs as _wire_codecs
 
 Axes = Tuple[str, ...]
 
+# Scaffold helpers live in repro.core.wire.base now; the historical names
+# are kept for in-repo consumers (repro.core.error_feedback) and tests.
+_axis_rank_size = _wire_base.axis_rank_size
+_gather_nested = _wire_base.gather_nested
+_center = _wire_base.center
 
-def _axis_rank_size(axes: Axes):
-    """Linear rank of this shard within the compression axes + node count."""
-    rank = jnp.zeros((), jnp.int32)
-    n = 1
-    for ax in axes:
-        rank = rank * compat.axis_size(ax) + jax.lax.axis_index(ax)
-        n *= compat.axis_size(ax)
-    return rank, n
-
-
-def _center(x, policy: str):
-    if policy == "zero":
-        return jnp.zeros((), jnp.float32)
-    if policy == "mean":
-        return jnp.mean(x).astype(jnp.float32)
-    if policy == "min":
-        return jnp.min(x).astype(jnp.float32)
-    raise ValueError(f"center policy {policy!r} not supported in collectives "
-                     "(optimal centers need the §6 solver — reference path only)")
+# Wire-geometry helpers + the §4.4 Bernoulli buffer format (re-exported:
+# tests and comm_cost docs reference them under these names).
+fixed_k_blocks = _wire_codecs.fixed_k_blocks
+fixed_k_wire_slots = _wire_codecs.fixed_k_wire_slots
+bernoulli_wire_slots = _wire_codecs.bernoulli_wire_slots
+bernoulli_pack = _wire_codecs.bernoulli_pack
+bernoulli_unpack = _wire_codecs.bernoulli_unpack
 
 
 # --------------------------------------------------------------------------- #
-# fixed-k (block-structured) compressed mean — the production encoder.
+# Named per-codec entry points (thin wrappers over the registry).
 # --------------------------------------------------------------------------- #
-
-def fixed_k_blocks(d: int, fraction: float) -> int:
-    """kb: number of sampled blocks for a d-vector at the given fraction."""
-    nb = fk.num_blocks(d)
-    return max(1, min(nb, int(round(fraction * nb))))
-
-
-def fixed_k_wire_slots(d: int, fraction: float) -> int:
-    """Wire-dtype elements of one fixed-k gather buffer: kb·BLOCK values + μ."""
-    return fixed_k_blocks(d, fraction) * fk.BLOCK + 1
-
-
-def bernoulli_wire_slots(d: int, fraction: float) -> int:
-    """Wire-dtype elements of one §4.4 Bernoulli buffer: cap values + μ."""
-    return comm_cost.bernoulli_capacity(d, float(fraction)) + 1
-
-
-def _fixed_k_wire(x, key, cfg: t.CompressionConfig, shared: bool):
-    """Encode the local vector: (values (kb, BLOCK), mu, block_ids)."""
-    d = x.size
-    nb = fk.num_blocks(d)
-    kb = fixed_k_blocks(d, cfg.encoder.fraction)
-    if shared:
-        ksup = key  # same subset on every node
-    else:
-        rank, _ = _axis_rank_size(cfg.axes)
-        ksup = jax.random.fold_in(key, rank)
-    ids = fk.sample_blocks(ksup, nb, kb)
-    mu = _center(x, cfg.encoder.center)
-    vals = fk.fixed_k_encode(x, ids, mu)
-    return vals.astype(cfg.wire_dtype), mu, ids
-
 
 def fixed_k_mean_shared(x, key, cfg: t.CompressionConfig):
-    """shared_support mode: one psum of [k wire values ‖ μ] + scatter-decode.
-
-    Collective traffic: kb·BLOCK + 1 wire-dtype elements — versus d
-    full-precision elements for exact pmean — in a single launch (μ rides
-    the tail slot of the value buffer).
-    """
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1).astype(jnp.float32)
-    vals, mu, ids = _fixed_k_wire(flat, key, cfg, shared=True)
-    # the psum runs at the wire dtype (r = 16 bits/coordinate, matching the
-    # paper's r and the bf16-native TPU all-reduce)
-    wire = jnp.concatenate([vals.reshape(-1),
-                            mu.astype(cfg.wire_dtype)[None]])
-    wire = jax.lax.pmean(wire, cfg.axes).astype(jnp.float32)
-    vals = wire[:-1].reshape(-1, fk.BLOCK)
-    mu = wire[-1]
-    y = fk.fixed_k_decode(vals, ids, mu, shape)
-    return y.astype(dtype)
+    """shared_support mode: one psum of [k wire values ‖ μ] + scatter-decode."""
+    return wire.get("fixed_k_shared").mean(x, key, cfg)
 
 
 def fixed_k_mean_gather(x, key, cfg: t.CompressionConfig):
     """gather_decode mode: independent supports, one all_gather of
-    [values ‖ μ] per node.
-
-    Wire per node: n·(kb·BLOCK + 1) wire-dtype elements (receives),
-    kb·BLOCK + 1 sends — the star protocol §4.4 with implicit seeds.
-    Decode regenerates every peer's support locally and averages the dense
-    reconstructions:  Y = mean μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
-    """
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1).astype(jnp.float32)
-    d = flat.size
-    nb = fk.num_blocks(d)
-    kb = fixed_k_blocks(d, cfg.encoder.fraction)
-    rank, n = _axis_rank_size(cfg.axes)
-    my_ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
-    mu = _center(flat, cfg.encoder.center)
-    vals = fk.fixed_k_encode(flat, my_ids, mu)
-
-    # ---- the wire: values + centers only (supports regenerate from seed).
-    wire = jnp.concatenate([vals.reshape(-1), mu[None]]).astype(cfg.wire_dtype)
-    all_wire = _gather_nested(wire, cfg.axes).reshape(
-        n, kb * fk.BLOCK + 1).astype(jnp.float32)
-    all_vals = all_wire[:, :-1].reshape(n, kb, fk.BLOCK)
-    all_mu = all_wire[:, -1]
-
-    # ---- decode: Y = mean μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
-    def body(i, acc):
-        ids_i = fk.sample_blocks(jax.random.fold_in(key, i), nb, kb)
-        return acc.at[ids_i].add(all_vals[i])
-
-    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((nb, fk.BLOCK), jnp.float32))
-    y = (acc / n + jnp.mean(all_mu)).reshape(-1)[:d]
-    return y.reshape(shape).astype(dtype)
-
-
-# --------------------------------------------------------------------------- #
-# Bernoulli (variable-size-support) wire path — the §4.4 seed trick.
-# --------------------------------------------------------------------------- #
-
-def _bernoulli_support(key, d: int, p):
-    """The S_i of Eq. (1) under uniform probs: data-independent, so any peer
-    regenerates it from the shared per-step key + node index alone."""
-    u = jax.random.uniform(key, (d,), dtype=jnp.float32)
-    return u < p
-
-
-def bernoulli_pack(flat, key, p: float, cap: int, mu):
-    """Compact the Eq. (1) encoding into a (cap,) value buffer.
-
-    Sent coordinates land at their support-rank position; coordinates whose
-    rank overflows ``cap`` (≈6σ tail, see comm_cost.bernoulli_capacity) are
-    dropped — the decoder regenerates the same ranks and drops them too, so
-    encode/decode stay consistent (cost: a ~1e-9-probability bias toward μ
-    on the dropped coordinates).
-    """
-    d = flat.shape[0]
-    sent = _bernoulli_support(key, d, p)
-    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
-    scaled = flat / p - (1.0 - p) / p * mu
-    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
-    return jnp.zeros((cap,), jnp.float32).at[idx].set(scaled, mode="drop")
-
-
-def bernoulli_unpack(buf, key, p: float, cap: int, mu, d: int):
-    """Regenerate node ``key``'s support and reconstruct its dense Y_i."""
-    sent = _bernoulli_support(key, d, p)
-    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
-    valid = sent & (pos < cap)
-    vals = buf[jnp.clip(pos, 0, cap - 1)]
-    return jnp.where(valid, vals, mu)
-
-
-def _star_mean_gather(x, key, cfg: t.CompressionConfig, pack_fn, unpack_fn):
-    """Shared star-protocol scaffold for the variable-support wire paths.
-
-    Pack the local (d,) f32 vector into one flat wire buffer, all_gather
-    it over cfg.axes, reconstruct every peer's dense Y_i locally and
-    average: Y = (1/n) Σ_i unpack(wire_i).  ``pack_fn(flat, kenc)`` builds
-    the node's buffer; ``unpack_fn(row, i)`` decodes peer i's row.
-    """
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1).astype(jnp.float32)
-    d = flat.size
-    rank, n = _axis_rank_size(cfg.axes)
-    buf = pack_fn(flat, jax.random.fold_in(key, rank))
-    all_buf = _gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
-
-    def body(i, acc):
-        return acc + unpack_fn(all_buf[i], i)
-
-    acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
-    return (acc / n).reshape(shape).astype(dtype)
+    [values ‖ μ] per node."""
+    return wire.get("fixed_k").mean(x, key, cfg)
 
 
 def bernoulli_mean_gather(x, key, cfg: t.CompressionConfig):
-    """gather_decode for the Bernoulli encoder with a real wire format.
+    """gather_decode for the Bernoulli encoder with the real §4.4 wire."""
+    return wire.get("bernoulli").mean(x, key, cfg)
 
-    Each node all_gathers one [cap value slots ‖ μ] buffer; peers
-    regenerate the supports from fold_in(key, i).  Bit accounting:
-    comm_cost.cost_sparse_seed_capacity(n, cap, spec) — the static-shape
-    realization of Eq. (10).
-    """
-    d = x.size
-    p = float(cfg.encoder.fraction)
-    cap = comm_cost.bernoulli_capacity(d, p)
-
-    def pack(flat, kenc):
-        mu = _center(flat, cfg.encoder.center)
-        buf = bernoulli_pack(flat, kenc, p, cap, mu)
-        return jnp.concatenate([buf, mu[None]]).astype(cfg.wire_dtype)
-
-    def unpack(row, i):
-        row = row.astype(jnp.float32)
-        return bernoulli_unpack(row[:-1], jax.random.fold_in(key, i),
-                                p, cap, row[-1], d)
-
-    return _star_mean_gather(x, key, cfg, pack, unpack)
-
-
-# --------------------------------------------------------------------------- #
-# Binary / ternary packed bit-plane wire paths (§4.5 / §7.1).
-# --------------------------------------------------------------------------- #
 
 def binary_mean_gather(x, key, cfg: t.CompressionConfig):
-    """gather_decode for binary quantization with the packed 1-bit plane.
-
-    Each node all_gathers one uint32 buffer of [sign plane ‖ vmin, vmax]
-    (:mod:`repro.core.bitplane`); every peer reconstructs the dense
-    Y_i = vmin_i + bit_ij·Δ_i locally and averages.  Bit accounting:
-    comm_cost.cost_binary_packed — Eq. (11)'s 2·n·r + n·d rounded up to
-    wire words, no seed term (the plane is data-dependent and travels).
-    """
-    d = x.size
-    return _star_mean_gather(
-        x, key, cfg,
-        lambda flat, kenc: bitplane.binary_pack(flat, kenc, cfg.wire_dtype),
-        lambda row, i: bitplane.binary_unpack(row, d, cfg.wire_dtype))
+    """gather_decode for binary quantization with the packed 1-bit plane."""
+    return wire.get("binary").mean(x, key, cfg)
 
 
 def ternary_mean_gather(x, key, cfg: t.CompressionConfig):
-    """gather_decode for the ternary encoder (Eq. (21)) with a 2-bit plane.
+    """gather_decode for the ternary encoder with the packed 2-bit plane."""
+    return wire.get("ternary").mean(x, key, cfg)
 
-    Wire per node: [2-bit branch plane ‖ cap pass-through value slots ‖
-    c1, c2] in one uint32 buffer; the pass-through count is Binomial(d,
-    p_pass), so the value segment is capacity-padded exactly like the
-    Bernoulli §4.4 path.  Bit accounting: comm_cost.cost_ternary_packed.
-    """
-    d = x.size
-    p_pass = float(cfg.encoder.fraction)
-    cap = comm_cost.bernoulli_capacity(d, p_pass)
-    return _star_mean_gather(
-        x, key, cfg,
-        lambda flat, kenc: bitplane.ternary_pack(flat, kenc, p_pass, cap,
-                                                 cfg.wire_dtype),
-        lambda row, i: bitplane.ternary_unpack(row, d, cap, cfg.wire_dtype))
-
-
-def _gather_nested(v, axes: Axes):
-    """all_gather over possibly-multiple axes, flattening the node dim."""
-    out = v[None]
-    for ax in reversed(axes):
-        out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
-    return out
-
-
-# --------------------------------------------------------------------------- #
-# dense simulation (any encoder) + dispatch.
-# --------------------------------------------------------------------------- #
 
 def dense_sim_mean(x, key, cfg: t.CompressionConfig):
-    """Encode locally (independent), exact pmean of dense encodings.
+    """Encode locally (independent), exact pmean of dense encodings."""
+    return wire.get("dense").mean(x, key, cfg)
 
-    Estimate-distribution-identical to gather_decode; used to exercise the
-    bernoulli / binary / ternary encoders under shard_map.
-    """
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1).astype(jnp.float32)
-    rank, _ = _axis_rank_size(cfg.axes)
-    kenc = jax.random.fold_in(key, rank)
-    encd = encoders.encode(kenc, flat, cfg.encoder)
-    y = jax.lax.pmean(encd.y.astype(jnp.float32), cfg.axes)
-    return y.reshape(shape).astype(dtype)
 
+# --------------------------------------------------------------------------- #
+# Dispatch.
+# --------------------------------------------------------------------------- #
 
 def gather_wire_kind(cfg: t.CompressionConfig) -> str:
-    """The wire format gather_decode mode will actually use for ``cfg``.
+    """The base wire format gather_decode mode will actually use for ``cfg``.
 
     One of "fixed_k" | "bernoulli" | "binary" | "ternary" | "dense".
-    This is THE dispatch rule — compressed_mean routes through it, and
-    accounting (repro.train.bucketing.bucket_wire_bits) must consult it so
-    configs that fall back to the dense simulation (§6 optimal
+    Delegates to the codec registry (repro.core.wire.registry.gather_kind)
+    — THE dispatch rule that compressed_mean, the accounting
+    (comm_cost.cost_config, bucketing.bucket_wire_bits) and the presets all
+    consult, so configs that fall back to the dense simulation (§6 optimal
     probabilities, optimal centers on the seed-trick path) are charged
-    dense f32 bits, not the compressed wire they never ride.
+    dense f32 bits, not the compressed wire they never ride.  The §7.2
+    rotation flag composes on top and does not change the base kind.
     """
-    e = cfg.encoder
-    if e.kind == "fixed_k":
-        return "fixed_k"
-    if (e.kind == "bernoulli" and e.probs == "uniform"
-            and e.center in ("zero", "mean", "min")):
-        # §4.4 seed trick: the uniform-p support is data-independent, so
-        # it regenerates peer-side and only values + μ hit the wire.
-        return "bernoulli"
-    if e.kind == "binary":
-        # §4.5: data-dependent branch probabilities, so the packed 1-bit
-        # plane travels explicitly (no seed trick possible).
-        return "binary"
-    if e.kind == "ternary" and e.probs == "uniform":
-        # §7.1: 2-bit plane + capacity-padded pass-through values.
-        return "ternary"
-    # data-dependent probabilities (§6 optimal policies): message
-    # sizes/planes are not wire-modelled yet — simulate densely.
-    return "dense"
+    return wire.gather_kind(cfg)
 
 
 def compressed_mean(x, key, cfg: t.CompressionConfig):
     """Estimate mean(x) over cfg.axes under the configured protocol.
 
     Must be called inside shard_map with cfg.axes manual.  Unbiased:
-    E[result] = pmean(x, cfg.axes) for every mode (Lemmas 3.1/3.3).
+    E[result] = pmean(x, cfg.axes) for every mode (Lemmas 3.1/3.3; the
+    rotated compositions inherit unbiasedness from QᵀQ = I).
     """
     if cfg.mode == "none" or x.size < cfg.min_compress_size:
         return jax.lax.pmean(x, cfg.axes)
-    if cfg.mode == "shared_support":
-        return fixed_k_mean_shared(x, key, cfg)
-    if cfg.mode == "gather_decode":
-        fn = {"fixed_k": fixed_k_mean_gather,
-              "bernoulli": bernoulli_mean_gather,
-              "binary": binary_mean_gather,
-              "ternary": ternary_mean_gather,
-              "dense": dense_sim_mean}[gather_wire_kind(cfg)]
-        return fn(x, key, cfg)
-    if cfg.mode == "dense_sim":
-        return dense_sim_mean(x, key, cfg)
-    raise ValueError(cfg.mode)
+    return wire.resolve(cfg).mean(x, key, cfg)
 
 
 def partial_mean(x, alive, axes: Axes):
     """Straggler-tolerant exact mean over the live nodes only.
 
     ``alive``: local 0/1 scalar.  Unbiased for the survivors' mean — the
-    averaging decoder is n-agnostic (DESIGN.md §5).
+    averaging decoder is n-agnostic (docs/DESIGN.md §5).
     """
     num = jax.lax.psum(x * alive, axes)
     den = jnp.maximum(jax.lax.psum(alive, axes), 1.0)

@@ -165,6 +165,23 @@ def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None,
     raise ValueError(spec.protocol)
 
 
+def cost_config(cfg, *, n: int, d: int) -> float:
+    """Analytic cost of the wire codec the registry resolves for ``cfg``.
+
+    The config-level companion of :func:`cost`: instead of hand-picking a
+    protocol + kwargs, consult the one dispatch rule
+    (repro.core.wire.registry.resolve) and charge what ``compressed_mean``
+    will actually ship — the codec's gathered payload plus its implicit
+    seed bits; for the §7.2 rotated compositions this is the inner codec's
+    cost at the rotated length plus the rotation-seed term.  Identity
+    (verified per codec by tests/test_wire_registry.py):
+
+        cost_config == codec.wire_bits + codec.seed_bits.
+    """
+    from repro.core import wire  # local import: wire consumes this module
+    return float(wire.resolve(cfg).comm_cost_bits(n, d, cfg))
+
+
 # --- realized cost of one encoded round ----------------------------------- #
 
 def measure_bits(encoded, spec: CommSpec, d: int) -> float:

@@ -102,6 +102,50 @@ def mse_ternary(xs, p1, p2, c1s, c2s):
     return jnp.sum(terms) / n**2
 
 
+# --- §7.2: random-rotation pre-processing -------------------------------- #
+
+def mse_rotated(xs, krot, base_mse_fn):
+    """§7.2 composition rule: the rotated protocol's MSE, conditional on Q.
+
+    With a shared orthogonal rotation Q (seed ``krot``), encoding z_i =
+    Q·X_i, averaging in the rotated basis and unrotating the average gives
+
+        E‖Qᵀ z̄ − X̄‖² = E‖z̄ − Q X̄‖²   (‖Qᵀv‖ = ‖v‖),
+
+    i.e. *exactly* the base protocol's closed form evaluated at the rotated
+    data — the §7.2 analogue of how Lemma 7.2 specializes Lemma 3.2; the
+    unconditional MSE is the expectation of this quantity over Q.  For
+    non-power-of-two d the rotated basis has padded_dim(d) coordinates and
+    truncation makes the base form an upper bound (the discarded padding
+    error is nonnegative); at power-of-two d it is exact.
+
+    ``base_mse_fn`` maps the rotated (n, dp) stack to the base closed form
+    (e.g. ``mse_binary``, or a lambda closing over k for ``mse_fixed_k``).
+    """
+    from repro.core import rotation
+    return base_mse_fn(rotation.rotate(krot, xs))
+
+
+def mse_rotated_binary(xs, krot):
+    """Exact conditional MSE of rotated binary quantization (§7.2 ∘ Ex. 4):
+    Example 4's closed form at QX.  Validated against the wire path in
+    tests/test_rotation_wire.py and distributed_checks/rotated_wire_check."""
+    return mse_rotated(xs, krot, mse_binary)
+
+
+def mse_rotated_fixed_k(xs, k, krot):
+    """Exact conditional MSE of rotated fixed-k (§7.2 ∘ Lemma 3.4): the
+    Lemma 3.4 form at QX with the *rotated-basis* dimension dp.
+
+    Note the dp ≥ d subtlety: rotation pads to dp = padded_dim(d), so the
+    wire path samples k of dp coordinates and Lemma 3.4's (dp−k)/k factor
+    applies in the rotated basis.
+    """
+    from repro.core import rotation
+    zs = rotation.rotate(krot, xs)
+    return mse_fixed_k(zs, k, jnp.mean(zs, axis=-1))
+
+
 # --- Theorem 6.1 --------------------------------------------------------- #
 
 def thm61_bounds(xs, mus, B):

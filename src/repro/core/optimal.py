@@ -72,13 +72,16 @@ def optimal_probs_per_node(xs, mus, budgets):
     coordination needed).  For B = Σ B_i the resulting MSE is lower-bounded
     by the jointly-optimal MSE of problem (14) (verified by property test).
 
+    One ``vmap`` over nodes — a single trace regardless of n, and the
+    budgets stay traced (jit-compatible; tests/test_optimal.py asserts a
+    jit of this function compiles and matches the per-row solver).
+
     budgets: (n,) per-node bounds on Σ_j p_ij.
     """
-    outs = []
-    for i in range(xs.shape[0]):
-        outs.append(optimal_probs(xs[i:i + 1], mus[i:i + 1],
-                                  float(budgets[i])))
-    return jnp.concatenate(outs, axis=0)
+    budgets = jnp.asarray(budgets)
+    return jax.vmap(
+        lambda x, m, b: optimal_probs(x[None, :], m[None], b)[0]
+    )(xs, mus, budgets)
 
 
 def alternating_minimization(xs, B: float, iters: int = 20,

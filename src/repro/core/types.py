@@ -47,7 +47,11 @@ class EncoderSpec:
         (used by Example 4), or ``optimal`` (Eq. (16) /
         alternating minimization, §6).
       rotation: apply the randomized Hadamard pre-rotation (§7.2) before
-        encoding and undo it after decoding.
+        encoding and undo it after decoding.  Honored by the reference
+        stack (repro.core.protocol) and by the wire layer: the codec
+        registry wraps the resolved codec in the composable rotated
+        pre-transform (repro.core.wire.rotated, seed-only wire overhead),
+        rotating once per bucket.
     """
 
     kind: str = "fixed_k"

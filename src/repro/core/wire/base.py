@@ -1,0 +1,163 @@
+"""WireCodec: the unit of the wire layer (docs/DESIGN.md §3).
+
+The paper's protocols differ only in *what one node puts on the wire* and
+*how peers decode it*; everything else — the star-gather scaffold, bucket
+planning, bit accounting, benchmark sweeps — is protocol-independent.  A
+:class:`WireCodec` captures exactly that per-protocol surface:
+
+  * ``pack(flat, key, rank, cfg)``    — one node's wire buffer (any dtype);
+  * ``unpack(row, peer, key, cfg, d)``— reconstruct peer ``peer``'s dense
+    Y_i from its gathered row (regenerating seed-trick supports from
+    ``fold_in(key, peer)`` where the protocol allows);
+  * ``wire_slots(d, cfg)``            — static buffer length in elements;
+  * ``wire_bits(n, d, cfg)``          — exact gathered payload bits for an
+    n-node round: what the lowered HLO's collective result shape shows
+    (the star-protocol convention the paper's C sums use);
+  * ``reduce``                        — "all_gather" (star protocol) or
+    "psum" (shared-support / dense-simulation paths whose wire is a plain
+    all-reduce).
+
+``mean_flat`` is the collective itself: the default implementation is the
+star gather (pack → all_gather over cfg.axes → per-peer decode → average),
+which "psum" codecs override wholesale.  ``decode_gathered`` exists as a
+separate hook so codecs with a fused decode (fixed-k's scatter-accumulate)
+keep their exact op sequence — the refactor from the hand-rolled paths in
+repro.core.collectives is bit-identical by construction: same PRNG
+fold_in chain, same op order, same HLO.
+
+Accounting contract (verified by tests/test_wire_registry.py for every
+registered codec):  ``comm_cost_bits == wire_bits + seed_bits`` — the
+analytic §4 cost splits into bits that physically travel (the gathered
+buffer, HLO-measurable) plus bits that ride the implicit PRNG (the §4.4
+seed trick: supports/rotations regenerate peer-side from the shared key).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import types as t
+
+Axes = Tuple[str, ...]
+
+
+def axis_rank_size(axes: Axes):
+    """Linear rank of this shard within the compression axes + node count."""
+    rank = jnp.zeros((), jnp.int32)
+    n = 1
+    for ax in axes:
+        rank = rank * compat.axis_size(ax) + jax.lax.axis_index(ax)
+        n *= compat.axis_size(ax)
+    return rank, n
+
+
+def gather_nested(v, axes: Axes):
+    """all_gather over possibly-multiple axes, flattening the node dim."""
+    out = v[None]
+    for ax in reversed(axes):
+        out = jax.lax.all_gather(out, ax, axis=0, tiled=True)
+    return out
+
+
+def center(x, policy: str):
+    """The node center μ_i used on the wire (data-independent policies only)."""
+    if policy == "zero":
+        return jnp.zeros((), jnp.float32)
+    if policy == "mean":
+        return jnp.mean(x).astype(jnp.float32)
+    if policy == "min":
+        return jnp.min(x).astype(jnp.float32)
+    raise ValueError(f"center policy {policy!r} not supported on the wire "
+                     "(optimal centers need the §6 solver — reference path only)")
+
+
+class WireCodec:
+    """One registered wire format; see the module docstring for the contract.
+
+    Subclasses set ``name`` and ``reduce`` and implement the geometry,
+    accounting and pack/unpack hooks.  Codecs are stateless: all parameters
+    come from the :class:`repro.core.types.CompressionConfig` threaded into
+    every call, so a single registered instance serves every bucket/config.
+    """
+
+    name: str = "?"
+    reduce: str = "all_gather"          # "all_gather" | "psum"
+
+    # ---- wire geometry & accounting -------------------------------------- #
+
+    def wire_slots(self, d: int, cfg: t.CompressionConfig) -> int:
+        """Static length of one node's wire buffer, in buffer elements."""
+        raise NotImplementedError
+
+    def wire_bits(self, n: int, d: int, cfg: t.CompressionConfig) -> float:
+        """Exact gathered payload bits of one n-node round (HLO-verified)."""
+        raise NotImplementedError
+
+    def seed_bits(self, n: int, cfg: t.CompressionConfig) -> float:
+        """Bits riding the implicit PRNG instead of the wire (§4.4 seeds)."""
+        return 0.0
+
+    def cost_spec(self, d: int, cfg: t.CompressionConfig):
+        """(CommSpec, kwargs) mapping this codec onto comm_cost.cost."""
+        raise NotImplementedError
+
+    def comm_cost_bits(self, n: int, d: int, cfg: t.CompressionConfig) -> float:
+        """Analytic §4 cost via comm_cost.cost — == wire_bits + seed_bits."""
+        from repro.core import comm_cost
+        spec, kw = self.cost_spec(d, cfg)
+        return comm_cost.cost(spec, n=n, d=d, **kw)
+
+    # ---- per-node wire format -------------------------------------------- #
+
+    def pack(self, flat, key, rank, cfg: t.CompressionConfig):
+        """Encode the local (d,) f32 vector into one flat wire buffer.
+
+        ``key`` is the shared per-bucket key; protocols with per-node
+        randomness fold ``rank`` in themselves (so peers can regenerate
+        node i's draws from ``fold_in(key, i)`` alone).
+        """
+        raise NotImplementedError
+
+    def unpack(self, row, peer, key, cfg: t.CompressionConfig, d: int):
+        """Reconstruct peer ``peer``'s dense (d,) f32 Y_i from its row."""
+        raise NotImplementedError
+
+    def decode_gathered(self, rows, key, cfg: t.CompressionConfig,
+                        d: int, n: int):
+        """Averaging decoder over the gathered (n, slots) wire rows.
+
+        Default: Y = (1/n) Σ_i unpack(row_i) — codecs with a fused decode
+        (fixed-k scatter-accumulate) override this.
+        """
+        def body(i, acc):
+            return acc + self.unpack(rows[i], i, key, cfg, d)
+
+        acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
+        return acc / n
+
+    # ---- the collective --------------------------------------------------- #
+
+    def mean_flat(self, flat, key, cfg: t.CompressionConfig):
+        """Estimate mean(flat) over cfg.axes; must run inside shard_map.
+
+        Default: the star protocol (§2/§4.4) — one all_gather of the packed
+        buffer per call, decode locally.  "psum" codecs override.
+        """
+        d = flat.shape[0]
+        rank, n = axis_rank_size(cfg.axes)
+        buf = self.pack(flat, key, rank, cfg)
+        rows = gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
+        return self.decode_gathered(rows, key, cfg, d, n)
+
+    def mean(self, x, key, cfg: t.CompressionConfig):
+        """Shape/dtype-preserving wrapper around :meth:`mean_flat`."""
+        shape, dtype = x.shape, x.dtype
+        flat = x.reshape(-1).astype(jnp.float32)
+        y = self.mean_flat(flat, key, cfg)
+        return y.reshape(shape).astype(dtype)
+
+    def __repr__(self):
+        return f"<WireCodec {self.name} reduce={self.reduce}>"

@@ -1,0 +1,351 @@
+"""The five production wire codecs (docs/DESIGN.md §3).
+
+Each class below is the codec-registry form of a wire path that previously
+lived as a hand-rolled function in :mod:`repro.core.collectives`; the PRNG
+fold_in chains and op sequences are preserved exactly, so the refactor is
+bit-identical (same estimates, same lowered HLO — verified by
+tests/distributed_checks/quantized_wire_check.py and bucketing_check.py):
+
+  * ``fixed_k``        — §4.4 Eq. (9) gather path: block-structured fixed-k
+    values + μ tail; supports regenerate from fold_in(key, peer).
+  * ``fixed_k_shared`` — TPU-native shared-support variant: one psum of the
+    k-length value buffer (reduce kind "psum").
+  * ``bernoulli``      — §4.4 Eq. (10) seed trick with capacity-padded
+    value buffers (comm_cost.bernoulli_capacity).
+  * ``binary``         — §4.5 Eq. (11) packed 1-bit sign plane
+    (repro.core.bitplane), no seed term: the plane travels.
+  * ``ternary``        — §7.1 Eq. (21) packed 2-bit plane + capacity-padded
+    pass-through values.
+  * ``dense``          — dense simulation: encode per node, exact pmean of
+    the dense encodings (any encoder incl. the §6 optimal policies; charged
+    naive f32 bits — the wire it actually rides).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitplane
+from repro.core import comm_cost
+from repro.core import encoders
+from repro.core import types as t
+from repro.core.wire import base
+from repro.kernels.fixed_k_encode import ops as fk
+
+
+def _wire_r(cfg: t.CompressionConfig) -> int:
+    """r: bits per wire float (16 for bf16, 32 for f32)."""
+    return bitplane.wire_bits(cfg.wire_dtype)
+
+
+def _seed_spec(cfg: t.CompressionConfig) -> t.CommSpec:
+    """CommSpec of the §4.4 seed-trick paths at the configured wire dtype:
+    the μ tail slot travels at wire precision (r̄ = r)."""
+    r = _wire_r(cfg)
+    return t.CommSpec(protocol="sparse_seed", r_bits=r, rbar_bits=r,
+                      rseed_bits=t.DEFAULT_RSEED_BITS)
+
+
+# --------------------------------------------------------------------------- #
+# fixed-k (block-structured) — gather + shared-support variants.
+# --------------------------------------------------------------------------- #
+
+def fixed_k_blocks(d: int, fraction: float) -> int:
+    """kb: number of sampled blocks for a d-vector at the given fraction."""
+    nb = fk.num_blocks(d)
+    return max(1, min(nb, int(round(fraction * nb))))
+
+
+def fixed_k_wire_slots(d: int, fraction: float) -> int:
+    """Wire-dtype elements of one fixed-k gather buffer: kb·BLOCK values + μ."""
+    return fixed_k_blocks(d, fraction) * fk.BLOCK + 1
+
+
+class FixedKGatherCodec(base.WireCodec):
+    """gather_decode fixed-k: independent supports, [values ‖ μ] per node.
+
+    Wire per node: kb·BLOCK + 1 wire-dtype elements — the star protocol
+    §4.4 with implicit seeds.  Decode regenerates every peer's support
+    locally and averages the dense reconstructions:
+    Y = mean μ_i + (1/n) Σ_i scatter(ids_i, vals_i).
+    """
+
+    name = "fixed_k"
+
+    def wire_slots(self, d, cfg):
+        return fixed_k_wire_slots(d, cfg.encoder.fraction)
+
+    def wire_bits(self, n, d, cfg):
+        return float(n * self.wire_slots(d, cfg) * _wire_r(cfg))
+
+    def seed_bits(self, n, cfg):
+        return float(n * t.DEFAULT_RSEED_BITS)
+
+    def cost_spec(self, d, cfg):
+        k = fixed_k_blocks(d, cfg.encoder.fraction) * fk.BLOCK
+        return _seed_spec(cfg), {"k": k}
+
+    def pack(self, flat, key, rank, cfg):
+        d = flat.shape[0]
+        nb = fk.num_blocks(d)
+        kb = fixed_k_blocks(d, cfg.encoder.fraction)
+        ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
+        mu = base.center(flat, cfg.encoder.center)
+        vals = fk.fixed_k_encode(flat, ids, mu)
+        return jnp.concatenate([vals.reshape(-1), mu[None]]).astype(
+            cfg.wire_dtype)
+
+    def unpack(self, row, peer, key, cfg, d):
+        row = row.astype(jnp.float32)
+        nb = fk.num_blocks(d)
+        kb = fixed_k_blocks(d, cfg.encoder.fraction)
+        ids = fk.sample_blocks(jax.random.fold_in(key, peer), nb, kb)
+        vals = row[:-1].reshape(kb, fk.BLOCK)
+        dense = jnp.zeros((nb, fk.BLOCK), jnp.float32).at[ids].add(vals)
+        return dense.reshape(-1)[:d] + row[-1]
+
+    def decode_gathered(self, rows, key, cfg, d, n):
+        # fused scatter-accumulate decode (one (nb, BLOCK) accumulator
+        # instead of n dense intermediates) — the original op sequence.
+        rows = rows.astype(jnp.float32)
+        nb = fk.num_blocks(d)
+        kb = fixed_k_blocks(d, cfg.encoder.fraction)
+        all_vals = rows[:, :-1].reshape(n, kb, fk.BLOCK)
+        all_mu = rows[:, -1]
+
+        def body(i, acc):
+            ids_i = fk.sample_blocks(jax.random.fold_in(key, i), nb, kb)
+            return acc.at[ids_i].add(all_vals[i])
+
+        acc = jax.lax.fori_loop(0, n, body,
+                                jnp.zeros((nb, fk.BLOCK), jnp.float32))
+        return (acc / n + jnp.mean(all_mu)).reshape(-1)[:d]
+
+
+class FixedKSharedCodec(base.WireCodec):
+    """shared_support fixed-k: one psum of [k wire values ‖ μ] + scatter.
+
+    All nodes draw the *same* support (shared seed: ``key`` is not
+    rank-folded), so the averaged wire values ride a plain psum —
+    ring-bandwidth optimal.  MSE closed form:
+    :func:`repro.core.mse.mse_fixed_k_shared`.
+    """
+
+    name = "fixed_k_shared"
+    reduce = "psum"
+
+    def wire_slots(self, d, cfg):
+        return fixed_k_wire_slots(d, cfg.encoder.fraction)
+
+    def wire_bits(self, n, d, cfg):
+        # star-payload convention: n × the reduced buffer (what each node
+        # contributes), matching the all-reduce payload accounting in
+        # benchmarks/bench_collectives.py.
+        return float(n * self.wire_slots(d, cfg) * _wire_r(cfg))
+
+    def seed_bits(self, n, cfg):
+        # Eq. (9) charges r̄_s per node; our SPMD realization shares one
+        # seed (the per-step key), so this is the faithful-protocol bound.
+        return float(n * t.DEFAULT_RSEED_BITS)
+
+    def cost_spec(self, d, cfg):
+        k = fixed_k_blocks(d, cfg.encoder.fraction) * fk.BLOCK
+        return _seed_spec(cfg), {"k": k}
+
+    def mean_flat(self, flat, key, cfg):
+        d = flat.shape[0]
+        nb = fk.num_blocks(d)
+        kb = fixed_k_blocks(d, cfg.encoder.fraction)
+        ids = fk.sample_blocks(key, nb, kb)  # same subset on every node
+        mu = base.center(flat, cfg.encoder.center)
+        vals = fk.fixed_k_encode(flat, ids, mu).astype(cfg.wire_dtype)
+        # the psum runs at the wire dtype (r = 16 bits/coordinate, matching
+        # the paper's r and the bf16-native TPU all-reduce); μ rides the
+        # tail slot so the bucket still costs one launch.
+        wire = jnp.concatenate([vals.reshape(-1),
+                                mu.astype(cfg.wire_dtype)[None]])
+        wire = jax.lax.pmean(wire, cfg.axes).astype(jnp.float32)
+        gvals = wire[:-1].reshape(-1, fk.BLOCK)
+        return fk.fixed_k_decode(gvals, ids, wire[-1], (d,))
+
+
+# --------------------------------------------------------------------------- #
+# Bernoulli (variable-size-support) — the §4.4 seed trick.
+# --------------------------------------------------------------------------- #
+
+def bernoulli_wire_slots(d: int, fraction: float) -> int:
+    """Wire-dtype elements of one §4.4 Bernoulli buffer: cap values + μ."""
+    return comm_cost.bernoulli_capacity(d, float(fraction)) + 1
+
+
+def _bernoulli_support(key, d: int, p):
+    """The S_i of Eq. (1) under uniform probs: data-independent, so any peer
+    regenerates it from the shared per-step key + node index alone."""
+    u = jax.random.uniform(key, (d,), dtype=jnp.float32)
+    return u < p
+
+
+def bernoulli_pack(flat, key, p: float, cap: int, mu):
+    """Compact the Eq. (1) encoding into a (cap,) value buffer.
+
+    Sent coordinates land at their support-rank position; coordinates whose
+    rank overflows ``cap`` (≈6σ tail, see comm_cost.bernoulli_capacity) are
+    dropped — the decoder regenerates the same ranks and drops them too, so
+    encode/decode stay consistent (cost: a ~1e-9-probability bias toward μ
+    on the dropped coordinates).
+    """
+    d = flat.shape[0]
+    sent = _bernoulli_support(key, d, p)
+    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
+    scaled = flat / p - (1.0 - p) / p * mu
+    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
+    return jnp.zeros((cap,), jnp.float32).at[idx].set(scaled, mode="drop")
+
+
+def bernoulli_unpack(buf, key, p: float, cap: int, mu, d: int):
+    """Regenerate node ``key``'s support and reconstruct its dense Y_i."""
+    sent = _bernoulli_support(key, d, p)
+    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
+    valid = sent & (pos < cap)
+    vals = buf[jnp.clip(pos, 0, cap - 1)]
+    return jnp.where(valid, vals, mu)
+
+
+class BernoulliCodec(base.WireCodec):
+    """gather_decode for the uniform-p Bernoulli encoder, real §4.4 wire.
+
+    Each node all_gathers one [cap value slots ‖ μ] buffer; peers
+    regenerate the supports from fold_in(key, peer).  Bit accounting:
+    comm_cost.cost_sparse_seed_capacity — the static-shape realization of
+    Eq. (10).
+    """
+
+    name = "bernoulli"
+
+    def wire_slots(self, d, cfg):
+        return bernoulli_wire_slots(d, cfg.encoder.fraction)
+
+    def wire_bits(self, n, d, cfg):
+        return float(n * self.wire_slots(d, cfg) * _wire_r(cfg))
+
+    def seed_bits(self, n, cfg):
+        return float(n * t.DEFAULT_RSEED_BITS)
+
+    def cost_spec(self, d, cfg):
+        cap = comm_cost.bernoulli_capacity(d, float(cfg.encoder.fraction))
+        return _seed_spec(cfg), {"cap": cap}
+
+    def pack(self, flat, key, rank, cfg):
+        d = flat.shape[0]
+        p = float(cfg.encoder.fraction)
+        cap = comm_cost.bernoulli_capacity(d, p)
+        kenc = jax.random.fold_in(key, rank)
+        mu = base.center(flat, cfg.encoder.center)
+        buf = bernoulli_pack(flat, kenc, p, cap, mu)
+        return jnp.concatenate([buf, mu[None]]).astype(cfg.wire_dtype)
+
+    def unpack(self, row, peer, key, cfg, d):
+        p = float(cfg.encoder.fraction)
+        cap = comm_cost.bernoulli_capacity(d, p)
+        row = row.astype(jnp.float32)
+        return bernoulli_unpack(row[:-1], jax.random.fold_in(key, peer),
+                                p, cap, row[-1], d)
+
+
+# --------------------------------------------------------------------------- #
+# Binary / ternary packed bit-plane codecs (§4.5 / §7.1).
+# --------------------------------------------------------------------------- #
+
+class BinaryCodec(base.WireCodec):
+    """gather_decode for binary quantization with the packed 1-bit plane.
+
+    Each node all_gathers one uint32 buffer of [sign plane ‖ vmin, vmax]
+    (:mod:`repro.core.bitplane`).  No seed term: the branch choices are
+    data-dependent, so the plane travels explicitly.
+    """
+
+    name = "binary"
+
+    def wire_slots(self, d, cfg):
+        return bitplane.binary_wire_words(d, cfg.wire_dtype)
+
+    def wire_bits(self, n, d, cfg):
+        return float(n * 32 * self.wire_slots(d, cfg))
+
+    def cost_spec(self, d, cfg):
+        return (t.CommSpec(protocol="binary", r_bits=_wire_r(cfg)),
+                {"packed": True})
+
+    def pack(self, flat, key, rank, cfg):
+        return bitplane.binary_pack(flat, jax.random.fold_in(key, rank),
+                                    cfg.wire_dtype)
+
+    def unpack(self, row, peer, key, cfg, d):
+        return bitplane.binary_unpack(row, d, cfg.wire_dtype)
+
+
+class TernaryCodec(base.WireCodec):
+    """gather_decode for the ternary encoder (Eq. (21)) with a 2-bit plane.
+
+    Wire per node: [2-bit branch plane ‖ cap pass-through value slots ‖
+    c1, c2] in one uint32 buffer; the value segment is capacity-padded
+    exactly like the Bernoulli §4.4 path.
+    """
+
+    name = "ternary"
+
+    def _cap(self, d, cfg):
+        return comm_cost.bernoulli_capacity(d, float(cfg.encoder.fraction))
+
+    def wire_slots(self, d, cfg):
+        return bitplane.ternary_wire_words(d, self._cap(d, cfg),
+                                           cfg.wire_dtype)
+
+    def wire_bits(self, n, d, cfg):
+        return float(n * 32 * self.wire_slots(d, cfg))
+
+    def cost_spec(self, d, cfg):
+        return (t.CommSpec(protocol="ternary", r_bits=_wire_r(cfg)),
+                {"packed": True, "cap": self._cap(d, cfg)})
+
+    def pack(self, flat, key, rank, cfg):
+        d = flat.shape[0]
+        return bitplane.ternary_pack(flat, jax.random.fold_in(key, rank),
+                                     float(cfg.encoder.fraction),
+                                     self._cap(d, cfg), cfg.wire_dtype)
+
+    def unpack(self, row, peer, key, cfg, d):
+        return bitplane.ternary_unpack(row, d, self._cap(d, cfg),
+                                       cfg.wire_dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Dense simulation (any encoder) — the accounting-honest fallback.
+# --------------------------------------------------------------------------- #
+
+class DenseSimCodec(base.WireCodec):
+    """Encode locally (independent), exact pmean of the dense encodings.
+
+    Estimate-distribution-identical to gather_decode; supports every
+    encoder (incl. the §6 optimal-probability policies, whose message
+    sizes are data-dependent and not wire-modelled yet).  Charged naive
+    dense f32 bits — the wire it actually rides.
+    """
+
+    name = "dense"
+    reduce = "psum"
+
+    def wire_slots(self, d, cfg):
+        return d
+
+    def wire_bits(self, n, d, cfg):
+        return float(n * d * 32)
+
+    def cost_spec(self, d, cfg):
+        return t.CommSpec(protocol="naive", r_bits=32), {}
+
+    def mean_flat(self, flat, key, cfg):
+        rank, _ = base.axis_rank_size(cfg.axes)
+        kenc = jax.random.fold_in(key, rank)
+        encd = encoders.encode(kenc, flat, cfg.encoder)
+        return jax.lax.pmean(encd.y.astype(jnp.float32), cfg.axes)

@@ -1,0 +1,104 @@
+"""The wire-codec registry: THE dispatch rule of the wire layer.
+
+Every consumer of "what does this config put on the wire" — the collective
+itself (:func:`repro.core.collectives.compressed_mean`), the bit
+accounting (:func:`repro.core.comm_cost.cost_config`,
+:func:`repro.train.bucketing.bucket_wire_bits`), the benchmark sweeps and
+the config presets (repro.configs.registry) — resolves a codec here, so a
+new protocol registers once instead of being threaded through four layers
+by hand.
+
+``gather_kind`` preserves the historical rule verbatim: configs whose
+encoder cannot ride a modelled wire format (§6 data-dependent
+probabilities, optimal centers on the seed-trick path) fall back to the
+dense simulation and are charged dense f32 bits — never a compressed wire
+they don't actually ride.  ``cfg.encoder.rotation`` composes on top: the
+resolved base codec is wrapped in the §7.2 pre-transform
+(:class:`repro.core.wire.rotated.RotatedCodec`).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import types as t
+from repro.core.wire import base, codecs, rotated
+
+_CODECS: Dict[str, base.WireCodec] = {}
+
+
+def register(codec: base.WireCodec) -> base.WireCodec:
+    """Register a codec instance under its ``name`` (last write wins)."""
+    _CODECS[codec.name] = codec
+    return codec
+
+
+def get(name: str) -> base.WireCodec:
+    if name not in _CODECS:
+        raise KeyError(f"unknown wire codec {name!r}; have {names()}")
+    return _CODECS[name]
+
+
+def names() -> List[str]:
+    return sorted(_CODECS)
+
+
+# ---- the built-in codecs --------------------------------------------------- #
+
+register(codecs.FixedKGatherCodec())
+register(codecs.FixedKSharedCodec())
+register(codecs.BernoulliCodec())
+register(codecs.BinaryCodec())
+register(codecs.TernaryCodec())
+register(codecs.DenseSimCodec())
+# the shipped §7.2 presets (any other rotated composition is built on the
+# fly by resolve(); registering these two gives them stable names for
+# enumeration in tests/benchmarks).
+register(rotated.RotatedCodec(get("binary")))
+register(rotated.RotatedCodec(get("fixed_k")))
+
+
+# ---- dispatch --------------------------------------------------------------- #
+
+def gather_kind(cfg: t.CompressionConfig) -> str:
+    """The base wire format gather_decode mode will use for ``cfg``.
+
+    One of "fixed_k" | "bernoulli" | "binary" | "ternary" | "dense".
+    """
+    e = cfg.encoder
+    if e.kind == "fixed_k":
+        return "fixed_k"
+    if (e.kind == "bernoulli" and e.probs == "uniform"
+            and e.center in ("zero", "mean", "min")):
+        # §4.4 seed trick: the uniform-p support is data-independent, so
+        # it regenerates peer-side and only values + μ hit the wire.
+        return "bernoulli"
+    if e.kind == "binary":
+        # §4.5: data-dependent branch probabilities, so the packed 1-bit
+        # plane travels explicitly (no seed trick possible).
+        return "binary"
+    if e.kind == "ternary" and e.probs == "uniform":
+        # §7.1: 2-bit plane + capacity-padded pass-through values.
+        return "ternary"
+    # data-dependent probabilities (§6 optimal policies): message
+    # sizes/planes are not wire-modelled yet — simulate densely.
+    return "dense"
+
+
+def resolve(cfg: t.CompressionConfig) -> base.WireCodec:
+    """The codec ``compressed_mean`` will execute for ``cfg``.
+
+    Raises ValueError for modes without a wire codec ("none" short-circuits
+    to an exact pmean before dispatch ever happens).
+    """
+    if cfg.mode == "shared_support":
+        codec = get("fixed_k_shared")
+    elif cfg.mode == "dense_sim":
+        codec = get("dense")
+    elif cfg.mode == "gather_decode":
+        codec = get(gather_kind(cfg))
+    else:
+        raise ValueError(cfg.mode)
+    if cfg.encoder.rotation:
+        name = "rotated_" + codec.name
+        return _CODECS.get(name) or rotated.RotatedCodec(codec)
+    return codec

@@ -1,0 +1,94 @@
+"""Composable §7.2 pre-transform: seeded per-bucket Hadamard rotation.
+
+:class:`RotatedCodec` wraps *any* registered :class:`~repro.core.wire.base
+.WireCodec`: the bucket vector is rotated once by Q = (1/√d)HD before the
+inner codec encodes, and the averaging decode is unrotated once at the end
+— valid because averaging commutes with the (linear, orthogonal) Q, so
+
+    E‖Qᵀ z̄ − X̄‖² = E‖z̄ − Q X̄‖²,
+
+i.e. conditional on the rotation seed the composed protocol's MSE is the
+inner codec's closed form evaluated at the rotated data (the §7.2
+composition rule; see repro.core.mse.mse_rotated).  Rotation spreads the
+information of spiky/anisotropic vectors evenly across coordinates, which
+is exactly the regime where the min/max-bracketed quantizers (binary,
+ternary) and uniform-support sparsifiers are at their worst — this is the
+backbone of Suresh et al.'s rotated one-bit estimator and of DRIVE.
+
+Wire overhead is **seed-only**: Q is identified by one shared seed derived
+from the per-bucket key (rotation.rotation_key), which every peer already
+holds — the SPMD analogue of the §4.4 seed trick.  The gathered payload is
+therefore exactly the inner codec's buffer at the rotated length
+``rotation.padded_dim(d)`` (== d's next power of two; equal to d whenever
+d is already a power of two), which tests verify against the lowered HLO.
+The analytic §4 cost adds one r̄_s seed term per node, mirroring how
+Eq. (9)/(10) charge the support seeds that likewise never travel here.
+
+Reduce kind is inherited: the rotation composes with gather codecs
+(rotate → pack → all_gather → decode → unrotate) and with psum codecs
+(rotate → psum wire → decode → unrotate) alike.
+"""
+from __future__ import annotations
+
+from repro.core import rotation
+from repro.core import types as t
+from repro.core.wire import base
+
+
+class RotatedCodec(base.WireCodec):
+    """The inner codec applied in the rotated basis z = Qx (§7.2)."""
+
+    def __init__(self, inner: base.WireCodec):
+        if isinstance(inner, RotatedCodec):
+            raise ValueError("rotation pre-transform does not nest")
+        self.inner = inner
+        self.name = "rotated_" + inner.name
+        self.reduce = inner.reduce
+
+    # ---- geometry & accounting: the inner codec at padded_dim(d) ---------- #
+
+    def wire_slots(self, d, cfg):
+        return self.inner.wire_slots(rotation.padded_dim(d), cfg)
+
+    def wire_bits(self, n, d, cfg):
+        # HLO-exact: the gathered payload IS the inner buffer at dp — the
+        # rotation itself ships nothing (seed-only overhead).
+        return self.inner.wire_bits(n, rotation.padded_dim(d), cfg)
+
+    def seed_bits(self, n, cfg):
+        return (self.inner.seed_bits(n, cfg)
+                + float(n * t.DEFAULT_RSEED_BITS))
+
+    def cost_spec(self, d, cfg):
+        return self.inner.cost_spec(rotation.padded_dim(d), cfg)
+
+    def comm_cost_bits(self, n, d, cfg):
+        # inner analytic cost at the rotated length + the rotation seed
+        # (r̄_s per node in the faithful star protocol; regenerated from
+        # the shared key on SPMD hardware, like the §4.4 support seeds).
+        return (self.inner.comm_cost_bits(n, rotation.padded_dim(d), cfg)
+                + float(n * t.DEFAULT_RSEED_BITS))
+
+    # ---- wire format: rotate before pack, unrotate after decode ----------- #
+
+    def pack(self, flat, key, rank, cfg):
+        z = rotation.rotate(rotation.rotation_key(key), flat)
+        return self.inner.pack(z, key, rank, cfg)
+
+    def unpack(self, row, peer, key, cfg, d):
+        dp = rotation.padded_dim(d)
+        z = self.inner.unpack(row, peer, key, cfg, dp)
+        return rotation.unrotate(rotation.rotation_key(key), z, d)
+
+    def decode_gathered(self, rows, key, cfg, d, n):
+        # unrotate once, after the averaging decode (linearity of Q).
+        dp = rotation.padded_dim(d)
+        zbar = self.inner.decode_gathered(rows, key, cfg, dp, n)
+        return rotation.unrotate(rotation.rotation_key(key), zbar, d)
+
+    def mean_flat(self, flat, key, cfg):
+        d = flat.shape[0]
+        krot = rotation.rotation_key(key)
+        z = rotation.rotate(krot, flat)
+        zbar = self.inner.mean_flat(z, key, cfg)
+        return rotation.unrotate(krot, zbar, d)

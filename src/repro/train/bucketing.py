@@ -38,12 +38,13 @@ elementwise, and mean-over-eaxes∘mean-over-caxes == mean over both); for
 compressed buckets the estimate is the same protocol applied to the
 concatenated vector — per-coordinate unbiasedness is unchanged (Lemmas
 3.1/3.3 are coordinate-wise), only the node-center μ and the fixed-k
-support are now drawn per bucket instead of per leaf.  Binary/ternary
-buckets route onto packed uint32 bit-plane wire buffers
-(repro.core.bitplane via collectives.binary_mean_gather /
-ternary_mean_gather): the per-bucket scalars (vmin/vmax resp. c1/c2) are
-likewise drawn per bucket, and :func:`bucket_wire_bits` gives the exact
-gathered bits each bucket puts on the wire.
+support are now drawn per bucket instead of per leaf.  Which wire format a
+compressed bucket rides is decided by the codec registry
+(repro.core.wire.registry.resolve — binary/ternary buckets land on packed
+uint32 bit-plane buffers, §7.2-rotated configs on the composed rotated
+codec): the per-bucket scalars (μ resp. vmin/vmax, c1/c2) are likewise
+drawn per bucket, and :func:`bucket_wire_bits` charges each bucket the
+resolved codec's exact gathered bits.
 """
 from __future__ import annotations
 
@@ -53,11 +54,10 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitplane
 from repro.core import collectives as coll
-from repro.core import comm_cost
 from repro.core import error_feedback as ef_lib
 from repro.core import types as t
+from repro.core import wire
 
 
 # --------------------------------------------------------------------------- #
@@ -241,36 +241,23 @@ def bucket_wire_bits(plan: BucketPlan, cfg: t.CompressionConfig,
 
     Star-protocol payload convention (the one the paper's C sums and the
     PR-1 capacity-accounting checks use): n × the per-node wire buffer
-    bits — exactly what the lowered HLO's all_gather result shape shows.
+    bits — exactly what the lowered HLO's collective result shape shows.
     Only defined for gather_decode wire paths; other modes return {}.
+
+    The per-bucket bits come straight from the codec registry
+    (``wire.resolve(cfg).wire_bits``) — the same dispatch rule
+    sync_grads_bucketed executes, so accounting can never drift from the
+    wire (dense-sim fallbacks are charged dense f32 bits; rotated
+    compositions the inner codec's payload at the rotated length).  One
+    exception stays explicit: error feedback routes every compressed
+    bucket through compressed_mean_ef, whose wire is always the fixed-k EF
+    buffer regardless of encoder kind.
     """
     if cfg.mode != "gather_decode":
         return {}
-    r = bitplane.wire_bits(cfg.wire_dtype)
-    # THE dispatch rules — stay in sync with sync_grads_bucketed: error
-    # feedback routes every compressed bucket through compressed_mean_ef,
-    # whose wire is always the fixed-k EF buffer regardless of encoder
-    # kind; otherwise gather_wire_kind decides.
-    kind = "fixed_k" if cfg.error_feedback else coll.gather_wire_kind(cfg)
-    out: Dict[str, float] = {}
-    for b in plan.buckets:
-        if b.kind != "compressed":
-            continue
-        d = b.size
-        if kind == "binary":
-            bits = n * 32.0 * bitplane.binary_wire_words(d, cfg.wire_dtype)
-        elif kind == "ternary":
-            cap = comm_cost.bernoulli_capacity(d, float(cfg.encoder.fraction))
-            bits = n * 32.0 * bitplane.ternary_wire_words(d, cap,
-                                                          cfg.wire_dtype)
-        elif kind == "bernoulli":
-            bits = n * coll.bernoulli_wire_slots(d, cfg.encoder.fraction) * r
-        elif kind == "fixed_k":
-            bits = n * coll.fixed_k_wire_slots(d, cfg.encoder.fraction) * r
-        else:  # dense_sim fallback: the full f32 vector rides a pmean
-            bits = n * d * 32.0
-        out[b.bid] = float(bits)
-    return out
+    codec = wire.get("fixed_k") if cfg.error_feedback else wire.resolve(cfg)
+    return {b.bid: float(codec.wire_bits(n, b.size, cfg))
+            for b in plan.buckets if b.kind == "compressed"}
 
 
 # --------------------------------------------------------------------------- #

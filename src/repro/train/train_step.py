@@ -10,7 +10,10 @@ spec still hold unreduced per-replica contributions — exactly the paper's
 X_i.  Those axes are synchronized by:
 
   * compressed_mean (encode → collective → decode) on axes ∩ cfg.axes for
-    leaves ≥ min_compress_size — the paper's technique on the wire;
+    leaves ≥ min_compress_size — the paper's technique on the wire, with
+    the wire format resolved by the codec registry (repro.core.wire:
+    fixed-k / Bernoulli seed-trick / packed bit-planes / §7.2-rotated
+    compositions, per the config's encoder);
   * exact psum-mean on the remainder (small leaves, non-selected axes).
 
 By default the rule executes *bucketed* (repro.train.bucketing, enabled by

@@ -1,0 +1,15 @@
+"""Shared test helpers."""
+import jax.numpy as jnp
+
+
+def simulate_wire_round(codec, cfg, xs, key):
+    """The star protocol without a mesh: pack per rank, stack the rows as
+    an all_gather would, run the codec's averaging decode.
+
+    Exercises the full wire format (buffer layout, seed-trick regeneration,
+    pad/truncate) with none of the shard_map machinery — the mesh execution
+    itself is covered by tests/distributed_checks/.
+    """
+    n, d = xs.shape
+    rows = jnp.stack([codec.pack(xs[i], key, i, cfg) for i in range(n)])
+    return codec.decode_gathered(rows, key, cfg, d, n)

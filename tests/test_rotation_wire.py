@@ -1,0 +1,182 @@
+"""§7.2 rotation through the *wire path* (repro.core.wire.rotated).
+
+Covers what tests/test_kernels.py-style rotate/unrotate round trips cannot:
+the pad-to-power-of-two handling must survive pack → gather → unpack (the
+wire buffer lives in the padded rotated basis), and the composed
+estimator's MSE must match the §7.2 closed forms.  The 8-device
+end-to-end run is tests/distributed_checks/rotated_wire_check.py,
+launched here as a subprocess.
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import simulate_wire_round as _simulate_round
+from repro.core import comm_cost, mse, rotation, types, wire
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+N = 8
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg(kind, *, frac=0.25, center="min"):
+    return types.CompressionConfig(
+        encoder=types.EncoderSpec(kind=kind, fraction=frac, center=center,
+                                  rotation=True),
+        mode="gather_decode", axes=("data",), wire_dtype="float32",
+        min_compress_size=0)
+
+
+# --------------------------------------------------------------------------- #
+# Non-power-of-two d through the wire: pad/truncate must survive the trip.
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("kind", ["binary", "fixed_k", "bernoulli", "ternary"])
+@pytest.mark.parametrize("d", [37, 300, 1000])
+def test_nonpow2_roundtrip_through_wire_path(kind, d):
+    """rotated codec at non-power-of-two d: the wire buffer is sized for
+    the padded basis, decode truncates back, and the lossless operating
+    point recovers x exactly — so pad → pack → gather → unpack → unrotate
+    is the identity, not just rotate∘unrotate in isolation."""
+    cfg = _cfg(kind, frac=1.0 if kind != "ternary" else 0.999999)
+    codec = wire.resolve(cfg)
+    dp = rotation.padded_dim(d)
+    assert codec.wire_slots(d, cfg) == codec.inner.wire_slots(dp, cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(d), (N, d)) * 0.5
+    # identical inputs on every node: any unbiased estimator that is exact
+    # at full budget must return x itself (binary/ternary quantize, so for
+    # those assert unbiasedness-level closeness over a small average).
+    xs_same = jnp.broadcast_to(xs[0], (N, d))
+    got = _simulate_round(codec, cfg, xs_same, KEY)
+    assert got.shape == (d,)
+    if kind in ("fixed_k", "bernoulli"):
+        # p = 1 / k = d: lossless — the round trip must be exact to fp.
+        np.testing.assert_allclose(np.asarray(got), np.asarray(xs_same[0]),
+                                   rtol=2e-4, atol=2e-4)
+    else:
+        assert bool(jnp.all(jnp.isfinite(got)))
+
+
+@pytest.mark.parametrize("d", [37, 300, 1000])
+def test_nonpow2_rotated_binary_unbiased_through_wire(d):
+    """Monte-Carlo unbiasedness of the full non-pow2 wire path (the padded
+    coordinates carry rotation mass that must be returned, not dropped)."""
+    cfg = _cfg("binary")
+    codec = wire.resolve(cfg)
+    xs = jax.random.normal(jax.random.PRNGKey(d + 1), (N, d)) * 0.5
+    xs = xs.at[:, 0].add(3.0)
+    true = np.asarray(jnp.mean(xs, axis=0))
+
+    def one(k):
+        return _simulate_round(codec, cfg, xs, k)
+
+    trials = 400
+    ys = jax.lax.map(jax.jit(one), jax.random.split(KEY, trials))
+    bias = np.max(np.abs(np.asarray(jnp.mean(ys, axis=0)) - true))
+    # per-coordinate std of the mean estimate ~ sqrt(MSE/d / trials)
+    tol = 6 * float(jnp.sqrt(jnp.mean(jnp.var(ys, axis=0)) / trials)) + 1e-4
+    assert bias < tol, (bias, tol)
+
+
+# --------------------------------------------------------------------------- #
+# §7.2 closed forms (power-of-two d: the conditional form is exact).
+# --------------------------------------------------------------------------- #
+
+def _mc_mse(sample_y, xs, trials=3000):
+    x_true = jnp.mean(xs, axis=0)
+
+    def one(k):
+        err = sample_y(k) - x_true
+        return jnp.sum(err * err)
+
+    errs = jax.lax.map(jax.jit(one), jax.random.split(KEY, trials))
+    return float(jnp.mean(errs)), float(jnp.std(errs) / np.sqrt(trials))
+
+
+def test_rotated_binary_wire_mse_matches_closed_form():
+    """Wire-path MSE == Example 4's form at QX, averaged over the same
+    rotation seeds the wire derives (mse.mse_rotated_binary)."""
+    d = 64
+    xs = jax.random.normal(jax.random.PRNGKey(42), (N, d))
+    xs = xs.at[:, 0].add(5.0)  # anisotropic: rotation matters here
+    cfg = _cfg("binary")
+    codec = wire.resolve(cfg)
+    got, se = _mc_mse(lambda k: _simulate_round(codec, cfg, xs, k), xs)
+    keys = jax.random.split(KEY, 3000)
+    want = float(jnp.mean(jax.lax.map(
+        jax.jit(lambda k: mse.mse_rotated_binary(xs, rotation.rotation_key(k))),
+        keys)))
+    assert abs(got - want) < max(5 * se, 0.03 * want), (got, want, se)
+    # and the §7.2 win is real on this data:
+    assert want < float(mse.mse_binary(xs))
+
+
+def test_rotated_fixed_k_wire_mse_matches_closed_form():
+    """Wire-path MSE == Lemma 3.4 at QX in the rotated basis
+    (mse.mse_rotated_fixed_k) — block-structured k, power-of-two d."""
+    d = 2048  # 2 blocks of fk.BLOCK; frac 0.5 → k = 1 block
+    xs = jax.random.normal(jax.random.PRNGKey(43), (N, d)) * 0.3
+    cfg = _cfg("fixed_k", frac=0.5, center="mean")
+    codec = wire.resolve(cfg)
+    k = codec.inner.wire_slots(d, cfg) - 1  # kb·BLOCK
+    got, se = _mc_mse(lambda kk: _simulate_round(codec, cfg, xs, kk), xs,
+                      trials=1500)
+    keys = jax.random.split(KEY, 1500)
+    want = float(jnp.mean(jax.lax.map(
+        jax.jit(lambda kk: mse.mse_rotated_fixed_k(
+            xs, k, rotation.rotation_key(kk))), keys)))
+    assert abs(got - want) < max(5 * se, 0.05 * want), (got, want, se)
+
+
+def test_reference_protocol_and_wire_closed_form_agree():
+    """The single-host reference stack (protocol.MeanEstimator with
+    rotation) and the wire codec share the same §7.2 math: identical
+    conditional closed forms."""
+    xs = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
+    krot = jax.random.PRNGKey(9)
+    zs = rotation.rotate(krot, xs)
+    np.testing.assert_allclose(
+        float(mse.mse_rotated_binary(xs, krot)), float(mse.mse_binary(zs)),
+        rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Seed-only payload overhead (accounting, incl. non-pow2).
+# --------------------------------------------------------------------------- #
+
+def test_rotated_payload_is_seed_only_overhead():
+    cfg = _cfg("binary")
+    plain = dataclasses.replace(
+        cfg, encoder=dataclasses.replace(cfg.encoder, rotation=False))
+    for d in (64, 4096):  # powers of two: payload must be equal exactly
+        assert (comm_cost.cost_config(cfg, n=N, d=d)
+                == comm_cost.cost_config(plain, n=N, d=d)
+                + N * types.DEFAULT_RSEED_BITS)
+    # non-pow2: the payload is the inner codec's at padded_dim.
+    d = 5000
+    rot = wire.resolve(cfg)
+    assert rot.wire_bits(N, d, cfg) == \
+        wire.resolve(plain).wire_bits(N, rotation.padded_dim(d), plain)
+
+
+# --------------------------------------------------------------------------- #
+# Multi-device end-to-end (subprocess: 8 fake CPU devices).
+# --------------------------------------------------------------------------- #
+
+def test_rotated_wire_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)  # the script sets its own
+    res = subprocess.run(
+        [sys.executable,
+         str(ROOT / "tests" / "distributed_checks" / "rotated_wire_check.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL ROTATED WIRE CHECKS PASSED" in res.stdout

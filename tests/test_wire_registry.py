@@ -1,0 +1,224 @@
+"""The WireCodec registry (repro.core.wire): dispatch, accounting, wire
+formats.
+
+The accounting test is the one parametrized check that replaced the
+per-protocol copies in test_comm_cost.py: for EVERY registered codec,
+
+    comm_cost_bits == wire_bits + seed_bits        (analytic identity)
+    wire_bits      == HLO-measured gathered bits   (gather codecs, one
+                                                    8-device subprocess)
+"""
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import simulate_wire_round as _simulate_round
+from repro.configs import registry as cfg_registry
+from repro.core import collectives, comm_cost, encoders, rotation, types, wire
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+N, D = 8, 5000  # D deliberately NOT a power of two nor a multiple of 32
+
+
+def _cfg(kind, *, rotation=False, frac=0.125, center="min", wire="float32",
+         mode="gather_decode", probs="uniform"):
+    return types.CompressionConfig(
+        encoder=types.EncoderSpec(kind=kind, fraction=frac, center=center,
+                                  rotation=rotation, probs=probs),
+        mode=mode, axes=("data",), wire_dtype=wire, min_compress_size=0)
+
+
+# one config per registered codec, used by both accounting tests below.
+CODEC_CFGS = {
+    "fixed_k": _cfg("fixed_k"),
+    "fixed_k_shared": _cfg("fixed_k", mode="shared_support"),
+    "bernoulli": _cfg("bernoulli", center="mean"),
+    "binary": _cfg("binary"),
+    "ternary": _cfg("ternary"),
+    "dense": _cfg("bernoulli", center="mean", probs="optimal"),
+    "rotated_binary": _cfg("binary", rotation=True),
+    "rotated_fixed_k": _cfg("fixed_k", rotation=True),
+}
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch: resolve() is THE rule.
+# --------------------------------------------------------------------------- #
+
+def test_registry_contains_all_production_codecs():
+    assert set(wire.names()) >= set(CODEC_CFGS)
+
+
+def test_resolve_matches_expected_codec():
+    for name, cfg in CODEC_CFGS.items():
+        assert wire.resolve(cfg).name == name, (name, wire.resolve(cfg).name)
+
+
+def test_resolve_rejects_uncompressed_modes():
+    with pytest.raises(ValueError):
+        wire.resolve(types.CompressionConfig(mode="none"))
+
+
+def test_rotation_wraps_any_codec_without_nesting():
+    rot = wire.resolve(_cfg("ternary", rotation=True))
+    assert rot.name == "rotated_ternary" and rot.inner.name == "ternary"
+    with pytest.raises(ValueError):
+        wire.RotatedCodec(rot)
+
+
+def test_gather_wire_kind_delegates_to_registry():
+    # the historical dispatch-rule API survives, now registry-backed.
+    assert collectives.gather_wire_kind(_cfg("binary")) == "binary"
+    assert collectives.gather_wire_kind(
+        _cfg("ternary", probs="optimal")) == "dense"
+    assert collectives.gather_wire_kind(
+        _cfg("bernoulli", center="optimal")) == "dense"
+    # rotation composes on top; the base kind is unchanged.
+    assert collectives.gather_wire_kind(_cfg("binary", rotation=True)) == "binary"
+
+
+def test_rotated_presets_resolve_to_registered_instances():
+    for name in ("rotated_binary", "rotated_fixed_k"):
+        cfg = cfg_registry.compression_preset(name, axes=("data",))
+        assert wire.resolve(cfg) is wire.get(name)
+
+
+# --------------------------------------------------------------------------- #
+# Accounting identity: analytic cost == wire payload + implicit seed bits.
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", sorted(CODEC_CFGS))
+@pytest.mark.parametrize("wire_dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("d", [31, 4096, 5000])
+def test_wire_bits_plus_seed_is_comm_cost(name, wire_dtype, d):
+    codec = wire.get(name)
+    cfg = dataclasses.replace(CODEC_CFGS[name], wire_dtype=wire_dtype)
+    got = codec.comm_cost_bits(N, d, cfg)
+    want = codec.wire_bits(N, d, cfg) + codec.seed_bits(N, cfg)
+    assert got == want, (name, d, got, want)
+    # and cost_config routes the same number through the registry.
+    assert comm_cost.cost_config(cfg, n=N, d=d) == got
+
+
+def test_rotated_wire_bits_are_inner_at_padded_dim():
+    for name in ("rotated_binary", "rotated_fixed_k"):
+        codec = wire.get(name)
+        cfg = CODEC_CFGS[name]
+        for d in (31, 4096, 5000):
+            dp = rotation.padded_dim(d)
+            assert codec.wire_bits(N, d, cfg) == \
+                codec.inner.wire_bits(N, dp, cfg)
+            # power of two ⇒ payload identical to the un-rotated codec.
+            if d == dp:
+                plain = dataclasses.replace(
+                    cfg, encoder=dataclasses.replace(cfg.encoder,
+                                                     rotation=False))
+                assert codec.wire_bits(N, d, cfg) == \
+                    wire.resolve(plain).wire_bits(N, d, plain)
+
+
+# --------------------------------------------------------------------------- #
+# HLO: gathered bits == wire_bits, one subprocess for every gather codec.
+# --------------------------------------------------------------------------- #
+
+GATHER_CODECS = ["fixed_k", "bernoulli", "binary", "ternary",
+                 "rotated_binary", "rotated_fixed_k"]
+
+_INNER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, functools, json, re
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import compat
+from repro.core import collectives, types
+
+N, D = 8, 5000
+mesh = jax.make_mesh((N,), ("data",))
+CFGS = json.loads(os.environ["WIRE_CFGS"])
+out = {}
+for name, kw in CFGS.items():
+    cfg = types.CompressionConfig(
+        encoder=types.EncoderSpec(**kw["encoder"]), mode="gather_decode",
+        axes=("data",), wire_dtype=kw["wire_dtype"], min_compress_size=0)
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
+                       out_specs=P(), check_vma=False)
+    def f(xs, key):
+        return collectives.compressed_mean(xs.reshape(D), key, cfg)
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((N, D), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32)).compile().as_text()
+    bits_of = {"f32": 32, "u32": 32, "bf16": 16}
+    ms = re.findall(r"= (f32|u32|bf16)\[(\d+),(\d+)\]\{[^}]*\} all-gather",
+                    txt)
+    gathered = [int(n) * int(s) * bits_of[dt] for dt, n, s in ms]
+    out[name] = {"launches": len(gathered), "bits": sum(gathered)}
+print(json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def hlo_gathered_bits():
+    cfgs = {}
+    for name in GATHER_CODECS:
+        cfg = CODEC_CFGS[name]
+        cfgs[name] = {"encoder": dataclasses.asdict(cfg.encoder),
+                      "wire_dtype": cfg.wire_dtype}
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env["WIRE_CFGS"] = json.dumps(cfgs)
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", _INNER], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, \
+        f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    return json.loads(res.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.parametrize("name", GATHER_CODECS)
+def test_hlo_gathered_bits_match_wire_bits(name, hlo_gathered_bits):
+    got = hlo_gathered_bits[name]
+    codec = wire.get(name)
+    cfg = CODEC_CFGS[name]
+    assert got["launches"] == 1, got
+    assert got["bits"] == codec.wire_bits(N, D, cfg), \
+        (name, got, codec.wire_bits(N, D, cfg))
+
+
+# --------------------------------------------------------------------------- #
+# Wire formats are meshless-testable: pack rows → decode_gathered.
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", ["fixed_k", "bernoulli", "binary", "ternary"])
+def test_decode_gathered_equals_dense_encoders(name):
+    """At f32 wire the codec wire path reproduces the dense per-node
+    encoders exactly: decode_gathered == mean_i encode(fold_in(key, i))."""
+    cfg = CODEC_CFGS[name]
+    key = jax.random.PRNGKey(5)
+    xs = jax.random.normal(jax.random.PRNGKey(6), (N, 999)) * 0.4
+    got = _simulate_round(wire.get(name), cfg, xs, key)
+
+    def dense_y(i):
+        kenc = jax.random.fold_in(key, i)
+        if name == "fixed_k":
+            codec = wire.get(name)
+            return codec.unpack(codec.pack(xs[i], key, i, cfg), i, key, cfg,
+                                xs.shape[1])
+        if name == "bernoulli":
+            return encoders.encode_bernoulli(
+                kenc, xs[i], cfg.encoder.fraction, jnp.mean(xs[i])).y
+        if name == "binary":
+            return encoders.encode_binary(kenc, xs[i]).y
+        return encoders.encode(kenc, xs[i], cfg.encoder).y
+
+    want = jnp.mean(jnp.stack([dense_y(i) for i in range(N)]), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -14,8 +14,12 @@ simulation).  Two byte conventions are reported per preset:
   paper's C sums charge (all-gather: the gathered result size; all-reduce:
   n × the reduced buffer).  Every preset's payload must equal the resolved
   codec's ``wire_bits`` accounting exactly, binary must undercut the dense
-  f32 simulation ≥ 8× (it lands at ~32×), and the §7.2 rotated presets
-  must cost exactly their un-rotated codec's payload (seed-only overhead).
+  f32 simulation ≥ 8× (it lands at ~32×), the §7.2 rotated presets must
+  cost exactly their un-rotated codec's payload (seed-only overhead), and
+  the error-feedback presets must cost exactly their EF-free codec's
+  payload byte-for-byte (residuals are local — repro.core.wire.ef), with
+  ``ternary_opt`` equal to ``ternary_packed`` (the §6 split rides the
+  plane).
 
 :func:`collect` is the machine-readable entry point benchmarks/run.py uses
 to emit BENCH_collectives.json.
@@ -153,6 +157,18 @@ def check_payload_accounting(res: dict) -> list:
         if presets[rot]["payload_bytes"] != presets[plain]["payload_bytes"]:
             bad.append(f"{rot}: payload != {plain} "
                        f"({presets[rot]['payload_bytes']:.0f} vs "
+                       f"{presets[plain]['payload_bytes']:.0f})")
+    for efp, plain in (("ef_fixed_k", "fixed_k_gather"),
+                       ("ef_bernoulli", "bernoulli_seed_1bit"),
+                       ("ef_binary", "binary_packed"),
+                       ("ef_ternary", "ternary_packed"),
+                       ("ef_rotated_binary", "rotated_binary"),
+                       ("ternary_opt", "ternary_packed")):
+        # EF residuals are local and the §6 ternary split rides the plane:
+        # payload must equal the plain codec byte-for-byte.
+        if presets[efp]["payload_bytes"] != presets[plain]["payload_bytes"]:
+            bad.append(f"{efp}: payload != {plain} "
+                       f"({presets[efp]['payload_bytes']:.0f} vs "
                        f"{presets[plain]['payload_bytes']:.0f})")
     return bad
 

@@ -32,8 +32,10 @@ SCHEMA_REQUIRED = {"schema", "n", "d", "presets"}
 PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
 # presets that must be present for the trajectory to stay comparable.
 CORE_PRESETS = {"none", "fixed_k_1bit", "bernoulli_seed_1bit",
-                "binary_packed", "ternary_packed", "rotated_binary",
-                "rotated_fixed_k", "fixed_k_gather", "binary_dense"}
+                "binary_packed", "ternary_packed", "ternary_opt",
+                "rotated_binary", "rotated_fixed_k",
+                "ef_fixed_k", "ef_bernoulli", "ef_binary", "ef_ternary",
+                "ef_rotated_binary", "fixed_k_gather", "binary_dense"}
 
 
 def validate_schema(res: dict) -> list:

@@ -43,6 +43,22 @@ def run(steps: int, compression: core_types.CompressionConfig, label: str):
     for h in hist:
         print(f"  step {h['step']:4d}  loss {h['loss']:.4f}  "
               f"gnorm {h['grad_norm']:.3f}  ({h['sec']:.0f}s)")
+    if compression.error_feedback and isinstance(tr.ef_state, dict):
+        # per-bucket error-feedback residual norms (the compression error
+        # the wire codec recycles each step — repro.core.wire.ef); bounded
+        # residuals are what make the EF estimates asymptotically unbiased.
+        if len(hist) > 1:
+            # difference two logged entries: the first one absorbs the jit
+            # compile, so this is the steady-state step time.
+            sec_per_step = ((hist[-1]["sec"] - hist[0]["sec"])
+                            / max(1, hist[-1]["step"] - hist[0]["step"]))
+        else:
+            sec_per_step = hist[-1]["sec"] / max(1, hist[-1]["step"] + 1)
+        for bid in sorted(tr.ef_state):
+            e = tr.ef_state[bid]
+            print(f"  ef residual ‖e‖ {float(jnp.linalg.norm(e)):9.4f}  "
+                  f"({e.size} coords)  bucket {bid}  "
+                  f"[{sec_per_step * 1e3:.0f} ms/step]")
     return hist
 
 
@@ -52,8 +68,10 @@ def main():
     ap.add_argument("--preset", default=None,
                     help="run a named wire preset from "
                          "repro.configs.registry.COMPRESSION_PRESETS "
-                         "(e.g. rotated_binary) instead of the default "
-                         "exact-vs-fixed-k comparison")
+                         "(e.g. rotated_binary, ef_rotated_binary, "
+                         "ternary_opt) instead of the default "
+                         "exact-vs-fixed-k comparison; ef_* presets print "
+                         "per-bucket residual norms")
     args = ap.parse_args()
 
     if args.preset:

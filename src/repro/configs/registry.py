@@ -87,6 +87,37 @@ COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
         encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1.0 / 16,
                                        center="mean", rotation=True),
         mode="gather_decode", axes=("pod",)),
+    # §6 per-coordinate optimal (p1, p2) on the ternary 2-bit plane
+    # (optimal.ternary_optimal_probs): same wire format and capacity rule
+    # as ternary_packed, strictly lower MSE at equal payload.
+    "ternary_opt": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
+                                       probs="optimal", center="min"),
+        mode="gather_decode", axes=("pod",)),
+    # Error feedback as a wire-layer wrap (repro.core.wire.ef): residual-
+    # recycling contractive messages in the inner codec's exact format —
+    # payload byte-identical to the EF-free preset, residuals local.
+    "ef_fixed_k": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1.0 / 16,
+                                       center="mean"),
+        mode="gather_decode", axes=("pod",), error_feedback=True),
+    "ef_bernoulli": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="bernoulli", fraction=1.0 / 16,
+                                       center="mean"),
+        mode="gather_decode", axes=("pod",), error_feedback=True),
+    "ef_binary": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="binary", center="min"),
+        mode="gather_decode", axes=("pod",), error_feedback=True),
+    "ef_ternary": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
+                                       center="min"),
+        mode="gather_decode", axes=("pod",), error_feedback=True),
+    # EF ∘ rotation ∘ binary — the DRIVE-style stack: rotate, 1-bit
+    # quantize, recycle the residual (EF outermost; docs/DESIGN.md §8).
+    "ef_rotated_binary": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="binary", center="min",
+                                       rotation=True),
+        mode="gather_decode", axes=("pod",), error_feedback=True),
 }
 
 

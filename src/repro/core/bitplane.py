@@ -105,6 +105,19 @@ def words_to_floats(w, count: int, wire_dtype):
         halves.astype(jnp.uint16), jnp.dtype(wire_dtype)).astype(jnp.float32)
 
 
+def rank_scatter(values, sent, cap: int):
+    """Place ``values[j]`` of each sent coordinate at its support-rank slot.
+
+    The capacity-padded value-segment layout shared by the Bernoulli §4.4
+    buffer, the ternary pass-through segment and the error-feedback twins:
+    ranks ≥ ``cap`` are dropped (the decoder regenerates the same ranks and
+    drops them symmetrically).  Returns a (cap,) f32 buffer.
+    """
+    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
+    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
+    return jnp.zeros((cap,), jnp.float32).at[idx].set(values, mode="drop")
+
+
 # --------------------------------------------------------------------------- #
 # Binary: 1-bit sign plane + (vmin, vmax) tail.
 # --------------------------------------------------------------------------- #
@@ -114,6 +127,19 @@ def binary_wire_words(d: int, wire_dtype) -> int:
     return bp_ops.num_words(d, 1) + float_words(2, wire_dtype)
 
 
+def binary_words(bits, c_lo, c_hi, wire_dtype):
+    """Assemble one binary wire buffer: [packed 1-bit plane ‖ (c_lo, c_hi)].
+
+    THE binary buffer layout — both the stochastic encoder
+    (:func:`binary_pack`) and the error-feedback twin
+    (repro.core.wire.ef) emit through here, so
+    :func:`binary_unpack` decodes either.
+    """
+    plane = bp_ops.pack_bits(bits.astype(jnp.uint32), 1)
+    tail = floats_to_words(jnp.stack([c_lo, c_hi]), wire_dtype)
+    return jnp.concatenate([plane, tail])
+
+
 def binary_pack(flat, key, wire_dtype):
     """Encode (d,) f32 -> (binary_wire_words(d),) uint32 wire buffer.
 
@@ -121,10 +147,8 @@ def binary_pack(flat, key, wire_dtype):
     stream as the dense simulation).
     """
     enc = encoders.encode_binary(key, flat)
-    plane = bp_ops.pack_bits(enc.support.astype(jnp.uint32), 1)
-    tail = floats_to_words(
-        jnp.stack([enc.extras["vmin"], enc.extras["vmax"]]), wire_dtype)
-    return jnp.concatenate([plane, tail])
+    return binary_words(enc.support, enc.extras["vmin"], enc.extras["vmax"],
+                        wire_dtype)
 
 
 def binary_unpack(buf, d: int, wire_dtype):
@@ -145,30 +169,42 @@ def ternary_wire_words(d: int, cap: int, wire_dtype) -> int:
             + float_words(2, wire_dtype))
 
 
-def ternary_pack(flat, key, p_pass: float, cap: int, wire_dtype):
-    """Encode (d,) f32 -> (ternary_wire_words(d, cap),) uint32 wire buffer.
+def ternary_words(sym, vbuf, c1, c2, wire_dtype):
+    """Assemble one ternary wire buffer: [2-bit plane ‖ values ‖ (c1, c2)].
 
-    Delegates the sampling to encoders.encode (kind="ternary": c1 = min(x),
-    c2 = max(x), p1 = p2 = (1 − p_pass)/2) and packs its branch indices —
-    so the decoded Y_i is bit-equal to the dense encoder's by construction
-    (modulo the ~1e-9 capacity overflow and wire-precision rounding).
+    THE ternary buffer layout — the Eq. (21) encoders
+    (:func:`ternary_pack`, uniform or §6-optimal split) and the
+    error-feedback twin (repro.core.wire.ef) all emit through here, so
+    :func:`ternary_unpack` decodes any of them.
     """
-    enc = encoders.encode(
-        key, flat.astype(jnp.float32),
-        t.EncoderSpec(kind="ternary", fraction=p_pass))
-    sym = enc.extras["branch"]
-    sent = sym == 2  # enc.y holds the pass-through value exactly there
-    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
-    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
-    vbuf = jnp.zeros((cap,), jnp.float32).at[idx].set(enc.y, mode="drop")
-
     plane = bp_ops.pack_bits(sym, 2)
     return jnp.concatenate([
         plane,
         floats_to_words(vbuf, wire_dtype),
-        floats_to_words(jnp.stack([enc.extras["c1"], enc.extras["c2"]]),
-                        wire_dtype),
+        floats_to_words(jnp.stack([c1, c2]), wire_dtype),
     ])
+
+
+def ternary_pack(flat, key, p_pass: float, cap: int, wire_dtype,
+                 probs: str = "uniform"):
+    """Encode (d,) f32 -> (ternary_wire_words(d, cap),) uint32 wire buffer.
+
+    Delegates the sampling to encoders.encode (kind="ternary": c1 = min(x),
+    c2 = max(x); ``probs`` picks the mid-split p1 = p2 = (1 − p_pass)/2 or
+    the §6 per-coordinate optimal split) and packs its branch indices — so
+    the decoded Y_i is bit-equal to the dense encoder's by construction
+    (modulo the ~1e-9 capacity overflow and wire-precision rounding).  The
+    buffer layout is independent of ``probs``: branch choices ride the
+    plane, so the decoder needs no probabilities.
+    """
+    enc = encoders.encode(
+        key, flat.astype(jnp.float32),
+        t.EncoderSpec(kind="ternary", fraction=p_pass, probs=probs))
+    sym = enc.extras["branch"]
+    sent = sym == 2  # enc.y holds the pass-through value exactly there
+    vbuf = rank_scatter(enc.y, sent, cap)
+    return ternary_words(sym, vbuf, enc.extras["c1"], enc.extras["c2"],
+                         wire_dtype)
 
 
 def ternary_unpack(buf, d: int, cap: int, wire_dtype):

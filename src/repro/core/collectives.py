@@ -29,7 +29,8 @@ Since the WireCodec refactor the per-protocol wire formats live in
   §7.1 Eq. (21)): a 1-bit (binary) or 2-bit (ternary) symbol plane packed
   into uint32 words, with centers — and, for ternary, a capacity-padded
   pass-through value segment — fused into the same buffer
-  (:mod:`repro.core.bitplane`).
+  (:mod:`repro.core.bitplane`).  ``ternary_opt`` is the §6 per-coordinate
+  optimal (p1, p2) split on the identical plane/capacity wire.
 
 * ``dense`` — encode per node, exact pmean of the dense encoded vectors:
   bit-identical estimates to gather_decode with no wire savings; supports
@@ -39,6 +40,12 @@ Since the WireCodec refactor the per-protocol wire formats live in
   per-bucket Hadamard rotation (:mod:`repro.core.wire.rotated`): rotate
   once before encode, unrotate once after the averaging decode, seed-only
   wire overhead.  Activated by ``cfg.encoder.rotation``.
+
+* ``ef_*`` — any of the above composed with the error-feedback layer
+  (:mod:`repro.core.wire.ef`): residual-corrected contractive messages in
+  the inner codec's exact wire format, residual state local.  Activated by
+  ``cfg.error_feedback``; thread the residual via
+  :func:`compressed_mean_stateful`.
 
 Wire fusion: every mode ships the per-node scalars *inside* the value
 buffer (one concatenated collective per call) so a bucketed train step
@@ -62,7 +69,7 @@ from repro.core.wire import codecs as _wire_codecs
 Axes = Tuple[str, ...]
 
 # Scaffold helpers live in repro.core.wire.base now; the historical names
-# are kept for in-repo consumers (repro.core.error_feedback) and tests.
+# are kept for tests and external callers.
 _axis_rank_size = _wire_base.axis_rank_size
 _gather_nested = _wire_base.gather_nested
 _center = _wire_base.center
@@ -133,13 +140,40 @@ def gather_wire_kind(cfg: t.CompressionConfig) -> str:
 def compressed_mean(x, key, cfg: t.CompressionConfig):
     """Estimate mean(x) over cfg.axes under the configured protocol.
 
-    Must be called inside shard_map with cfg.axes manual.  Unbiased:
-    E[result] = pmean(x, cfg.axes) for every mode (Lemmas 3.1/3.3; the
-    rotated compositions inherit unbiasedness from QᵀQ = I).
+    Must be called inside shard_map with cfg.axes manual.  Unbiased for
+    every EF-free mode: E[result] = pmean(x, cfg.axes) (Lemmas 3.1/3.3;
+    the rotated compositions inherit unbiasedness from QᵀQ = I).  Stateful
+    codecs (``cfg.error_feedback``) run one zero-state round here with the
+    state discarded — their contractive-twin messages are deliberately
+    *biased* compressors, so a single EF round is biased and only payload
+    /HLO measurement belongs on this entry point; training threads
+    residuals through :func:`compressed_mean_stateful`, whose *time
+    average* is what recovers the mean (docs/DESIGN.md §8).
     """
     if cfg.mode == "none" or x.size < cfg.min_compress_size:
         return jax.lax.pmean(x, cfg.axes)
     return wire.resolve(cfg).mean(x, key, cfg)
+
+
+def compressed_mean_stateful(x, state, key, cfg: t.CompressionConfig):
+    """One stateful round of the resolved codec: (estimate, new_state).
+
+    The generalization of :func:`compressed_mean` for codecs that thread
+    local per-bucket state — the error-feedback residual being the
+    production case (repro.core.wire.ef).  ``state`` may be shaped like
+    ``x`` or flat; it is threaded flat through the codec and returned in
+    its original shape.  Stateless codecs pass the state through untouched,
+    so callers that own state need no dispatch of their own.
+    """
+    if cfg.mode == "none" or x.size < cfg.min_compress_size:
+        return jax.lax.pmean(x, cfg.axes), state
+    codec = wire.resolve(cfg)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    st = state.reshape(-1).astype(jnp.float32)
+    y, st2 = codec.mean_flat_stateful(flat, st, key, cfg)
+    return (y.reshape(shape).astype(dtype),
+            st2.reshape(state.shape).astype(state.dtype))
 
 
 def partial_mean(x, alive, axes: Axes):

@@ -196,10 +196,18 @@ def encode(key, x, spec: t.EncoderSpec, probs=None, mu=None) -> Encoded:
             probs = spec.fraction
         return encode_bernoulli(key, x, probs, mu)
     if spec.kind == "ternary":
-        # Default ternary instantiation: c1/c2 bracket the data like the
-        # binary encoder, with the pass-through mass set by `fraction`.
+        # c1/c2 bracket the data like the binary encoder, with the
+        # pass-through mass set by `fraction`.  probs="uniform" splits the
+        # branch mass evenly; probs="optimal" uses the §6 per-coordinate
+        # optimal split (optimal.ternary_optimal_probs) — the pass
+        # probability stays `fraction` either way.
         c1 = jnp.min(x)
         c2 = jnp.max(x)
+        if spec.probs == "optimal":
+            from repro.core import optimal as optimal_lib
+            p1, p2 = optimal_lib.ternary_optimal_probs(x, spec.fraction,
+                                                       c1, c2)
+            return encode_ternary(key, x, p1, p2, c1, c2)
         half = (1.0 - spec.fraction) / 2.0
         return encode_ternary(key, x, half, half, c1, c2)
     raise ValueError(f"unhandled encoder kind {spec.kind!r}")

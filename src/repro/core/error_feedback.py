@@ -1,89 +1,35 @@
-"""Error feedback for compressed aggregation (beyond-paper extension).
+"""DEPRECATED shim — error feedback lives in the wire layer now.
 
-The paper's encoders are *unbiased* but high-variance at aggressive budgets
-(Lemma 3.2's (1/p − 1) factor).  Error feedback (Seide et al. 2014;
-Stich et al. 2018) instead uses a *contractive biased* compressor and
-recycles each node's residual into the next round:
+Error feedback (Seide et al. 2014; Stich et al. 2018) is a composable
+wire-codec wrapper since the EFCodec refactor: :class:`repro.core.wire.ef
+.EFCodec` wraps any registered codec (fixed-k, Bernoulli, the packed
+binary/ternary planes, the §7.2 rotated compositions) with
+residual-corrected contractive messages in the inner codec's exact wire
+format.  Resolution is the one registry rule — set
+``CompressionConfig.error_feedback=True`` and thread the residual through
+:func:`repro.core.collectives.compressed_mean_stateful` (the bucketed
+train step does this via ``repro.train.bucketing.init_ef_state`` /
+``sync_grads_bucketed``).
 
-    m_t  = C(x_t + e_t)              (transmitted message)
-    e_{t+1} = (x_t + e_t) − m_t      (local residual, never transmitted)
-
-For the fixed-k family, the contractive compressor is the **unscaled**
-support selection (scale 1 instead of Eq. (4)'s d/k): then
-E‖v − C(v)‖² = (1 − k/d)·‖v − μ1‖², a (k/d)-contraction on the centred
-part, which makes the EF recursion stable (the unbiased d/k rescale is an
-*expansion* — ‖v − C(v)‖ grows by (d/k − 1) on the support — and provably
-diverges under EF; tests/distributed_checks/collectives_check.py's
-``ef.converges`` check guards exactly this).
-
-The time-average of EF estimates telescopes:  (1/T) Σ_t m̄_t =
-x̄ + (e_0 − e_T)/T, so constant inputs are recovered at rate 1/T with zero
-asymptotic bias, while per-round wire cost stays n·k·r.
-
-State: one f32 residual buffer per compressed leaf, sharded like the
-gradient.
+The fixed-k-only ``compressed_mean_ef`` collective that used to live here
+(and bypassed the codec registry) is gone; this shim forwards to the codec
+round and will be removed once external callers migrate.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import dataclasses
 
 from repro.core import collectives
 from repro.core import types as t
-from repro.kernels.fixed_k_encode import ops as fk
-
-
-def init_state(tree):
-    """Zero residuals shaped like the gradient pytree."""
-    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
 
 
 def compressed_mean_ef(x, err, key, cfg: t.CompressionConfig):
-    """One EF round over cfg.axes: returns (mean_estimate, new_err).
+    """Deprecated: one EF round over cfg.axes; returns (estimate, new_err).
 
-    Uses the block-structured fixed-k selection with scale=1 (contractive).
-    ``shared_support`` keeps the k-length psum wire; ``gather_decode``
-    all_gathers the per-node messages (independent supports).
+    Thin shim over the EF wire codec: forces ``error_feedback=True`` on
+    ``cfg`` and runs the stateful codec round — use
+    :func:`repro.core.collectives.compressed_mean_stateful` directly.
     """
-    shape = x.shape
-    flat = x.reshape(-1).astype(jnp.float32) + err.reshape(-1)
-    d = flat.size
-    if cfg.mode == "none" or d < cfg.min_compress_size:
-        return jax.lax.pmean(x, cfg.axes), err
-
-    nb = fk.num_blocks(d)
-    kb = collectives.fixed_k_blocks(d, cfg.encoder.fraction)
-    mu = collectives._center(flat, cfg.encoder.center)
-
-    if cfg.mode == "shared_support":
-        ids = fk.sample_blocks(key, nb, kb)
-        vals = fk.fixed_k_encode(flat, ids, mu, scale=1.0)
-        my_recon = fk.fixed_k_decode(vals, ids, mu, (d,))
-        # one fused launch: μ rides the tail slot of the value buffer
-        wire = jnp.concatenate([vals.reshape(-1), mu[None]]).astype(
-            cfg.wire_dtype).astype(jnp.float32)
-        gwire = jax.lax.pmean(wire, cfg.axes)
-        gvals = gwire[:-1].reshape(-1, fk.BLOCK)
-        est = fk.fixed_k_decode(gvals, ids, gwire[-1], shape)
-    else:  # gather_decode: independent supports
-        rank, n = collectives._axis_rank_size(cfg.axes)
-        ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
-        vals = fk.fixed_k_encode(flat, ids, mu, scale=1.0)
-        my_recon = fk.fixed_k_decode(vals, ids, mu, (d,))
-        wire = jnp.concatenate([vals.reshape(-1), mu[None]]).astype(
-            cfg.wire_dtype)
-        all_wire = collectives._gather_nested(wire, cfg.axes).reshape(
-            n, kb * fk.BLOCK + 1).astype(jnp.float32)
-        all_vals = all_wire[:, :-1].reshape(n, kb, fk.BLOCK)
-        all_mu = all_wire[:, -1]
-
-        def body(i, acc):
-            ids_i = fk.sample_blocks(jax.random.fold_in(key, i), nb, kb)
-            return acc.at[ids_i].add(all_vals[i])
-
-        acc = jax.lax.fori_loop(0, n, body,
-                                jnp.zeros((nb, fk.BLOCK), jnp.float32))
-        est = ((acc / n + jnp.mean(all_mu)).reshape(-1)[:d]).reshape(shape)
-
-    new_err = (flat - my_recon.reshape(-1)).reshape(shape)
-    return est.astype(x.dtype), new_err
+    if not cfg.error_feedback:
+        cfg = dataclasses.replace(cfg, error_feedback=True)
+    return collectives.compressed_mean_stateful(x, err, key, cfg)

@@ -84,6 +84,47 @@ def optimal_probs_per_node(xs, mus, budgets):
     )(xs, mus, budgets)
 
 
+def ternary_optimal_probs(x, q, c1=None, c2=None):
+    """§6-optimal per-coordinate (p1, p2) for the ternary encoder (§7.1).
+
+    The Eq. (21) protocol leaves the split between the c1/c2 branches free:
+    any (p1_j, p2_j) with p1_j + p2_j = 1 − q is unbiased (Lemma 7.1).
+    At fixed pass mass q and centers c1 = min x, c2 = max x, the exact
+    per-coordinate variance (corrected Lemma 7.2, see mse.mse_ternary) as a
+    function of the mixture mean s_j = p1_j·c1 + p2_j·c2 is
+
+        Var_j(s) = s·(c1 + c2) − (1 − q)·c1·c2 + (x_j − s)²/q − x_j²,
+
+    convex in s with unconstrained minimizer s*_j = x_j − q·(c1 + c2)/2,
+    clamped to the feasible [(1 − q)c1, (1 − q)c2].  The default mid-split
+    p1 = p2 = (1 − q)/2 corresponds to s = (1 − q)(c1 + c2)/2 and is
+    recovered iff x_j sits at the midpoint — so the optimal split never
+    loses (tests/test_optimal.py asserts the dominance via mse_ternary).
+
+    The pass branch keeps probability exactly q per coordinate regardless
+    of the split, so the 6σ capacity sizing of the realized pass-through
+    mass (comm_cost.bernoulli_capacity at p = q) is unchanged — which is
+    what lets this ride the existing 2-bit-plane wire format as a plain
+    codec (repro.core.wire.codecs.TernaryOptCodec).
+
+    Returns (p1, p2) arrays shaped like ``x``.  Pass the caller's centers
+    via ``c1``/``c2`` when already computed (encoders.encode does) so the
+    split is optimized for exactly the centers shipped on the wire.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    q = jnp.asarray(q, jnp.float32)
+    if c1 is None:
+        c1 = jnp.min(x)
+    if c2 is None:
+        c2 = jnp.max(x)
+    s = jnp.clip(x - q * (c1 + c2) / 2, (1.0 - q) * c1, (1.0 - q) * c2)
+    span = c2 - c1
+    p1 = jnp.where(span > 0, ((1.0 - q) * c2 - s) / jnp.where(span > 0, span, 1.0),
+                   1.0 - q)  # degenerate constant vector: all mass on c1
+    p1 = jnp.broadcast_to(p1, x.shape)
+    return p1, (1.0 - q) - p1
+
+
 def alternating_minimization(xs, B: float, iters: int = 20,
                              init_center: str = "mean") -> Tuple[jax.Array, jax.Array, jax.Array]:
     """§6 alternating scheme for the joint (p, μ) problem (14).

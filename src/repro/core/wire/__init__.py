@@ -1,13 +1,14 @@
-"""Wire-codec subsystem (docs/DESIGN.md §3).
+"""Wire-codec subsystem (docs/DESIGN.md §3, §8).
 
 A :class:`~repro.core.wire.base.WireCodec` is one wire format: pack /
-unpack / slots / bits / reduce kind.  The registry
-(:mod:`repro.core.wire.registry`) holds the built-in codecs — the five
-production paths plus the shipped §7.2 rotated compositions — and is the
-single dispatch rule consulted by collectives, comm_cost, bucketing,
-configs and benchmarks.
+unpack / slots / bits / reduce kind (+ optional local codec state).  The
+registry (:mod:`repro.core.wire.registry`) holds the built-in codecs — the
+production base paths plus the shipped §7.2 rotated and error-feedback
+compositions — and is the single dispatch rule consulted by collectives,
+comm_cost, bucketing, configs and benchmarks.
 """
 from repro.core.wire.base import WireCodec  # noqa: F401
+from repro.core.wire.ef import EFCodec  # noqa: F401
 from repro.core.wire.registry import (  # noqa: F401
     gather_kind, get, names, register, resolve)
 from repro.core.wire.rotated import RotatedCodec  # noqa: F401

@@ -17,13 +17,27 @@ planning, bit accounting, benchmark sweeps — is protocol-independent.  A
     "psum" (shared-support / dense-simulation paths whose wire is a plain
     all-reduce).
 
-``mean_flat`` is the collective itself: the default implementation is the
-star gather (pack → all_gather over cfg.axes → per-peer decode → average),
-which "psum" codecs override wholesale.  ``decode_gathered`` exists as a
-separate hook so codecs with a fused decode (fixed-k's scatter-accumulate)
-keep their exact op sequence — the refactor from the hand-rolled paths in
+``mean_flat`` is the collective itself: gather codecs run the star gather
+(pack → all_gather over cfg.axes → per-peer decode → average); "psum"
+codecs run pack → pmean → ``decode_reduced`` (their wire is the reduced
+buffer itself).  ``decode_gathered`` exists as a separate hook so codecs
+with a fused decode (fixed-k's scatter-accumulate) keep their exact op
+sequence — the refactor from the hand-rolled paths in
 repro.core.collectives is bit-identical by construction: same PRNG
 fold_in chain, same op order, same HLO.
+
+Stateful codecs (docs/DESIGN.md §8): a codec may thread per-bucket state
+through the round — error feedback's residual is the production case
+(:mod:`repro.core.wire.ef`).  ``state_shape`` declares the state (None for
+the stateless majority), ``init_state`` zeros it, and
+``mean_flat_stateful`` is the (estimate, new_state) entry point every
+caller that owns state uses (``repro.core.collectives
+.compressed_mean_stateful``, ``repro.train.bucketing``).  The default
+implementation makes every stateless codec trivially drivable through the
+stateful API (state passes through untouched), so the train step has ONE
+code path regardless of codec.  State is local by contract: it never
+appears in the wire buffer, so the payload accounting below is unchanged
+by statefulness (HLO-verified in tests/distributed_checks/ef_wire_check).
 
 Accounting contract (verified by tests/test_wire_registry.py for every
 registered codec):  ``comm_cost_bits == wire_bits + seed_bits`` — the
@@ -85,6 +99,7 @@ class WireCodec:
 
     name: str = "?"
     reduce: str = "all_gather"          # "all_gather" | "psum"
+    stateful: bool = False              # True iff state_shape is not None
 
     # ---- wire geometry & accounting -------------------------------------- #
 
@@ -138,17 +153,53 @@ class WireCodec:
         acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
         return acc / n
 
+    def decode_reduced(self, wire, key, cfg: t.CompressionConfig, d: int):
+        """Decode the *reduced* wire buffer of a "psum" codec.
+
+        Only "psum" codecs implement this: their collective is a plain
+        pmean of the packed buffer, and decoding the reduced buffer IS
+        decoding the averaged messages (the decode is linear in the wire
+        values).  Applied to one node's un-reduced buffer it reconstructs
+        that node's own dense message — which is how the error-feedback
+        wrapper obtains local contributions uniformly across reduce kinds.
+        """
+        raise NotImplementedError
+
+    # ---- codec state (stateless by default; see wire/ef.py) -------------- #
+
+    def state_shape(self, d: int, cfg: t.CompressionConfig):
+        """Shape of the per-bucket local state threaded through one round,
+        or None for stateless codecs.  State never travels on the wire."""
+        return None
+
+    def init_state(self, d: int, cfg: t.CompressionConfig):
+        """Zero state for a d-vector bucket (None for stateless codecs)."""
+        shp = self.state_shape(d, cfg)
+        return None if shp is None else jnp.zeros(shp, jnp.float32)
+
+    def mean_flat_stateful(self, flat, state, key, cfg: t.CompressionConfig):
+        """One stateful round: returns (mean_estimate, new_state).
+
+        Default: stateless codecs ignore and pass the state through, so
+        every codec is drivable through this one entry point.
+        """
+        return self.mean_flat(flat, key, cfg), state
+
     # ---- the collective --------------------------------------------------- #
 
     def mean_flat(self, flat, key, cfg: t.CompressionConfig):
         """Estimate mean(flat) over cfg.axes; must run inside shard_map.
 
-        Default: the star protocol (§2/§4.4) — one all_gather of the packed
-        buffer per call, decode locally.  "psum" codecs override.
+        Gather codecs run the star protocol (§2/§4.4) — one all_gather of
+        the packed buffer per call, decode locally.  "psum" codecs pmean
+        the packed buffer and decode the reduced wire.
         """
         d = flat.shape[0]
         rank, n = axis_rank_size(cfg.axes)
         buf = self.pack(flat, key, rank, cfg)
+        if self.reduce == "psum":
+            wire = jax.lax.pmean(buf, cfg.axes)
+            return self.decode_reduced(wire, key, cfg, d)
         rows = gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
         return self.decode_gathered(rows, key, cfg, d, n)
 

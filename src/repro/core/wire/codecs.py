@@ -16,6 +16,9 @@ tests/distributed_checks/quantized_wire_check.py and bucketing_check.py):
     (repro.core.bitplane), no seed term: the plane travels.
   * ``ternary``        — §7.1 Eq. (21) packed 2-bit plane + capacity-padded
     pass-through values.
+  * ``ternary_opt``    — the §6 optimal per-coordinate (p1, p2) split on the
+    same 2-bit plane and capacity rule (repro.core.optimal
+    .ternary_optimal_probs).
   * ``dense``          — dense simulation: encode per node, exact pmean of
     the dense encodings (any encoder incl. the §6 optimal policies; charged
     naive f32 bits — the wire it actually rides).
@@ -61,6 +64,25 @@ def fixed_k_wire_slots(d: int, fraction: float) -> int:
     return fixed_k_blocks(d, fraction) * fk.BLOCK + 1
 
 
+def fixed_k_pack(flat, key, cfg, *, scale=None):
+    """THE fixed-k wire buffer: [kb·BLOCK values ‖ μ] at the wire dtype.
+
+    ``key`` is the support seed exactly as sampled (the gather codec folds
+    the rank in, the shared codec does not).  ``scale=None`` is the
+    unbiased Eq. (4) rescale; ``scale=1.0`` the contractive scale-1 values
+    of the error-feedback twin (repro.core.wire.ef) — same layout either
+    way, so the codecs' unpack/decode hooks decode both.
+    """
+    d = flat.shape[0]
+    nb = fk.num_blocks(d)
+    kb = fixed_k_blocks(d, cfg.encoder.fraction)
+    ids = fk.sample_blocks(key, nb, kb)
+    mu = base.center(flat, cfg.encoder.center)
+    vals = fk.fixed_k_encode(flat, ids, mu, scale=scale)
+    return jnp.concatenate([vals.reshape(-1), mu[None]]).astype(
+        cfg.wire_dtype)
+
+
 class FixedKGatherCodec(base.WireCodec):
     """gather_decode fixed-k: independent supports, [values ‖ μ] per node.
 
@@ -86,14 +108,7 @@ class FixedKGatherCodec(base.WireCodec):
         return _seed_spec(cfg), {"k": k}
 
     def pack(self, flat, key, rank, cfg):
-        d = flat.shape[0]
-        nb = fk.num_blocks(d)
-        kb = fixed_k_blocks(d, cfg.encoder.fraction)
-        ids = fk.sample_blocks(jax.random.fold_in(key, rank), nb, kb)
-        mu = base.center(flat, cfg.encoder.center)
-        vals = fk.fixed_k_encode(flat, ids, mu)
-        return jnp.concatenate([vals.reshape(-1), mu[None]]).astype(
-            cfg.wire_dtype)
+        return fixed_k_pack(flat, jax.random.fold_in(key, rank), cfg)
 
     def unpack(self, row, peer, key, cfg, d):
         row = row.astype(jnp.float32)
@@ -152,21 +167,27 @@ class FixedKSharedCodec(base.WireCodec):
         k = fixed_k_blocks(d, cfg.encoder.fraction) * fk.BLOCK
         return _seed_spec(cfg), {"k": k}
 
-    def mean_flat(self, flat, key, cfg):
-        d = flat.shape[0]
+    def pack(self, flat, key, rank, cfg):
+        # shared support: ``key`` is deliberately NOT rank-folded — every
+        # node draws the same subset, so the wire values average under a
+        # plain psum.  The psum runs at the wire dtype (r = 16
+        # bits/coordinate, matching the paper's r and the bf16-native TPU
+        # all-reduce); μ rides the tail slot so the bucket still costs one
+        # launch.
+        return fixed_k_pack(flat, key, cfg)
+
+    def decode_reduced(self, wire, key, cfg, d):
+        wire = wire.astype(jnp.float32)
         nb = fk.num_blocks(d)
         kb = fixed_k_blocks(d, cfg.encoder.fraction)
-        ids = fk.sample_blocks(key, nb, kb)  # same subset on every node
-        mu = base.center(flat, cfg.encoder.center)
-        vals = fk.fixed_k_encode(flat, ids, mu).astype(cfg.wire_dtype)
-        # the psum runs at the wire dtype (r = 16 bits/coordinate, matching
-        # the paper's r and the bf16-native TPU all-reduce); μ rides the
-        # tail slot so the bucket still costs one launch.
-        wire = jnp.concatenate([vals.reshape(-1),
-                                mu.astype(cfg.wire_dtype)[None]])
-        wire = jax.lax.pmean(wire, cfg.axes).astype(jnp.float32)
+        ids = fk.sample_blocks(key, nb, kb)
         gvals = wire[:-1].reshape(-1, fk.BLOCK)
         return fk.fixed_k_decode(gvals, ids, wire[-1], (d,))
+
+    def unpack(self, row, peer, key, cfg, d):
+        # shared support ⇒ decoding one node's un-reduced buffer is peer-
+        # independent: it reconstructs that node's own dense message.
+        return self.decode_reduced(row, key, cfg, d)
 
 
 # --------------------------------------------------------------------------- #
@@ -185,21 +206,22 @@ def _bernoulli_support(key, d: int, p):
     return u < p
 
 
-def bernoulli_pack(flat, key, p: float, cap: int, mu):
+def bernoulli_pack(flat, key, p: float, cap: int, mu, *, scaled=True):
     """Compact the Eq. (1) encoding into a (cap,) value buffer.
 
     Sent coordinates land at their support-rank position; coordinates whose
     rank overflows ``cap`` (≈6σ tail, see comm_cost.bernoulli_capacity) are
     dropped — the decoder regenerates the same ranks and drops them too, so
     encode/decode stay consistent (cost: a ~1e-9-probability bias toward μ
-    on the dropped coordinates).
+    on the dropped coordinates).  ``scaled=False`` ships the raw values
+    instead of the unbiased 1/p rescale — the error-feedback twin
+    (repro.core.wire.ef); the layout is identical, so
+    :func:`bernoulli_unpack` decodes both.
     """
     d = flat.shape[0]
     sent = _bernoulli_support(key, d, p)
-    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
-    scaled = flat / p - (1.0 - p) / p * mu
-    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
-    return jnp.zeros((cap,), jnp.float32).at[idx].set(scaled, mode="drop")
+    vals = flat / p - (1.0 - p) / p * mu if scaled else flat
+    return bitplane.rank_scatter(vals, sent, cap)
 
 
 def bernoulli_unpack(buf, key, p: float, cap: int, mu, d: int):
@@ -209,6 +231,18 @@ def bernoulli_unpack(buf, key, p: float, cap: int, mu, d: int):
     valid = sent & (pos < cap)
     vals = buf[jnp.clip(pos, 0, cap - 1)]
     return jnp.where(valid, vals, mu)
+
+
+def bernoulli_buffer(flat, key, rank, cfg, *, scaled=True):
+    """THE §4.4 Bernoulli wire buffer: [cap value slots ‖ μ] at wire dtype
+    (support from fold_in(key, rank); ``scaled`` as in bernoulli_pack)."""
+    d = flat.shape[0]
+    p = float(cfg.encoder.fraction)
+    cap = comm_cost.bernoulli_capacity(d, p)
+    kenc = jax.random.fold_in(key, rank)
+    mu = base.center(flat, cfg.encoder.center)
+    buf = bernoulli_pack(flat, kenc, p, cap, mu, scaled=scaled)
+    return jnp.concatenate([buf, mu[None]]).astype(cfg.wire_dtype)
 
 
 class BernoulliCodec(base.WireCodec):
@@ -236,13 +270,7 @@ class BernoulliCodec(base.WireCodec):
         return _seed_spec(cfg), {"cap": cap}
 
     def pack(self, flat, key, rank, cfg):
-        d = flat.shape[0]
-        p = float(cfg.encoder.fraction)
-        cap = comm_cost.bernoulli_capacity(d, p)
-        kenc = jax.random.fold_in(key, rank)
-        mu = base.center(flat, cfg.encoder.center)
-        buf = bernoulli_pack(flat, kenc, p, cap, mu)
-        return jnp.concatenate([buf, mu[None]]).astype(cfg.wire_dtype)
+        return bernoulli_buffer(flat, key, rank, cfg)
 
     def unpack(self, row, peer, key, cfg, d):
         p = float(cfg.encoder.fraction)
@@ -319,6 +347,32 @@ class TernaryCodec(base.WireCodec):
                                        cfg.wire_dtype)
 
 
+class TernaryOptCodec(TernaryCodec):
+    """gather_decode for the §6-optimal ternary encoder (probs="optimal").
+
+    Per-coordinate optimal (p1, p2) — :func:`repro.core.optimal
+    .ternary_optimal_probs`, the §6 "optimal parameters" move applied to
+    the Eq. (21) plane — on the *same* wire format as ``ternary``: the
+    branch probabilities are data-dependent, but the realized branch
+    choices ride the 2-bit plane (which travels anyway), so the decoder
+    never needs them.  The pass-through mass stays exactly
+    Bernoulli(fraction) per coordinate under the optimal split, so the 6σ
+    capacity rule, wire_slots/wire_bits and cost_spec are all inherited
+    from :class:`TernaryCodec` unchanged — this codec is honestly
+    wire-modelled, unlike the §6 Bernoulli optimal-probability policies
+    (whose supports are implicit and still fall back to ``dense``).
+    """
+
+    name = "ternary_opt"
+
+    def pack(self, flat, key, rank, cfg):
+        d = flat.shape[0]
+        return bitplane.ternary_pack(flat, jax.random.fold_in(key, rank),
+                                     float(cfg.encoder.fraction),
+                                     self._cap(d, cfg), cfg.wire_dtype,
+                                     probs="optimal")
+
+
 # --------------------------------------------------------------------------- #
 # Dense simulation (any encoder) — the accounting-honest fallback.
 # --------------------------------------------------------------------------- #
@@ -344,8 +398,12 @@ class DenseSimCodec(base.WireCodec):
     def cost_spec(self, d, cfg):
         return t.CommSpec(protocol="naive", r_bits=32), {}
 
-    def mean_flat(self, flat, key, cfg):
-        rank, _ = base.axis_rank_size(cfg.axes)
+    def pack(self, flat, key, rank, cfg):
         kenc = jax.random.fold_in(key, rank)
-        encd = encoders.encode(kenc, flat, cfg.encoder)
-        return jax.lax.pmean(encd.y.astype(jnp.float32), cfg.axes)
+        return encoders.encode(kenc, flat, cfg.encoder).y.astype(jnp.float32)
+
+    def decode_reduced(self, wire, key, cfg, d):
+        return wire
+
+    def unpack(self, row, peer, key, cfg, d):
+        return row.astype(jnp.float32)

@@ -9,19 +9,24 @@ new protocol registers once instead of being threaded through four layers
 by hand.
 
 ``gather_kind`` preserves the historical rule verbatim: configs whose
-encoder cannot ride a modelled wire format (§6 data-dependent
-probabilities, optimal centers on the seed-trick path) fall back to the
-dense simulation and are charged dense f32 bits — never a compressed wire
-they don't actually ride.  ``cfg.encoder.rotation`` composes on top: the
-resolved base codec is wrapped in the §7.2 pre-transform
-(:class:`repro.core.wire.rotated.RotatedCodec`).
+encoder cannot ride a modelled wire format (optimal Bernoulli
+probabilities with implicit supports, optimal centers on the seed-trick
+path) fall back to the dense simulation and are charged dense f32 bits —
+never a compressed wire they don't actually ride.  The §6 *ternary*
+optimal probabilities ARE wire-modelled (the branch choices ride the 2-bit
+plane): they resolve to ``ternary_opt``.  Two wrappers compose on top of
+the base codec: ``cfg.encoder.rotation`` wraps the §7.2 pre-transform
+(:class:`repro.core.wire.rotated.RotatedCodec`), and
+``cfg.error_feedback`` wraps the residual-recycling layer outermost
+(:class:`repro.core.wire.ef.EFCodec` — EF∘rotation, so the residual stays
+in model coordinates; docs/DESIGN.md §8).
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
 from repro.core import types as t
-from repro.core.wire import base, codecs, rotated
+from repro.core.wire import base, codecs, ef, rotated
 
 _CODECS: Dict[str, base.WireCodec] = {}
 
@@ -49,12 +54,21 @@ register(codecs.FixedKSharedCodec())
 register(codecs.BernoulliCodec())
 register(codecs.BinaryCodec())
 register(codecs.TernaryCodec())
+register(codecs.TernaryOptCodec())
 register(codecs.DenseSimCodec())
 # the shipped §7.2 presets (any other rotated composition is built on the
 # fly by resolve(); registering these two gives them stable names for
 # enumeration in tests/benchmarks).
 register(rotated.RotatedCodec(get("binary")))
 register(rotated.RotatedCodec(get("fixed_k")))
+# the shipped error-feedback compositions (same deal: resolve() builds any
+# other EF wrap on the fly; these get stable names for enumeration).
+register(ef.EFCodec(get("fixed_k")))
+register(ef.EFCodec(get("fixed_k_shared")))
+register(ef.EFCodec(get("bernoulli")))
+register(ef.EFCodec(get("binary")))
+register(ef.EFCodec(get("ternary")))
+register(ef.EFCodec(get("rotated_binary")))
 
 
 # ---- dispatch --------------------------------------------------------------- #
@@ -62,7 +76,8 @@ register(rotated.RotatedCodec(get("fixed_k")))
 def gather_kind(cfg: t.CompressionConfig) -> str:
     """The base wire format gather_decode mode will use for ``cfg``.
 
-    One of "fixed_k" | "bernoulli" | "binary" | "ternary" | "dense".
+    One of "fixed_k" | "bernoulli" | "binary" | "ternary" | "ternary_opt"
+    | "dense".
     """
     e = cfg.encoder
     if e.kind == "fixed_k":
@@ -79,16 +94,25 @@ def gather_kind(cfg: t.CompressionConfig) -> str:
     if e.kind == "ternary" and e.probs == "uniform":
         # §7.1: 2-bit plane + capacity-padded pass-through values.
         return "ternary"
-    # data-dependent probabilities (§6 optimal policies): message
-    # sizes/planes are not wire-modelled yet — simulate densely.
+    if e.kind == "ternary" and e.probs == "optimal":
+        # §6 optimal (p1, p2): data-dependent, but the realized branches
+        # ride the plane anyway and the pass mass stays Bernoulli(q) per
+        # coordinate — same wire format and capacity rule as "ternary".
+        return "ternary_opt"
+    # data-dependent Bernoulli probabilities / optimal centers on the
+    # seed-trick path: supports are implicit and cannot regenerate
+    # peer-side — simulate densely, charge dense bits.
     return "dense"
 
 
 def resolve(cfg: t.CompressionConfig) -> base.WireCodec:
     """The codec ``compressed_mean`` will execute for ``cfg``.
 
-    Raises ValueError for modes without a wire codec ("none" short-circuits
-    to an exact pmean before dispatch ever happens).
+    Composition order (innermost to outermost): base codec → §7.2 rotation
+    (``cfg.encoder.rotation``) → error feedback (``cfg.error_feedback``).
+    EF outermost keeps its residual in model coordinates (docs/DESIGN.md
+    §8).  Raises ValueError for modes without a wire codec ("none"
+    short-circuits to an exact pmean before dispatch ever happens).
     """
     if cfg.mode == "shared_support":
         codec = get("fixed_k_shared")
@@ -100,5 +124,8 @@ def resolve(cfg: t.CompressionConfig) -> base.WireCodec:
         raise ValueError(cfg.mode)
     if cfg.encoder.rotation:
         name = "rotated_" + codec.name
-        return _CODECS.get(name) or rotated.RotatedCodec(codec)
+        codec = _CODECS.get(name) or rotated.RotatedCodec(codec)
+    if cfg.error_feedback:
+        name = "ef_" + codec.name
+        codec = _CODECS.get(name) or ef.EFCodec(codec)
     return codec

@@ -44,6 +44,9 @@ class RotatedCodec(base.WireCodec):
         self.inner = inner
         self.name = "rotated_" + inner.name
         self.reduce = inner.reduce
+        # codec state (e.g. a wrapped EFCodec's residual) is forwarded, so
+        # rotation∘EF compositions thread their state through the rotation.
+        self.stateful = inner.stateful
 
     # ---- geometry & accounting: the inner codec at padded_dim(d) ---------- #
 
@@ -85,6 +88,26 @@ class RotatedCodec(base.WireCodec):
         dp = rotation.padded_dim(d)
         zbar = self.inner.decode_gathered(rows, key, cfg, dp, n)
         return rotation.unrotate(rotation.rotation_key(key), zbar, d)
+
+    def decode_reduced(self, wire, key, cfg, d):
+        dp = rotation.padded_dim(d)
+        zbar = self.inner.decode_reduced(wire, key, cfg, dp)
+        return rotation.unrotate(rotation.rotation_key(key), zbar, d)
+
+    # ---- codec state: forwarded in the rotated basis ---------------------- #
+
+    def state_shape(self, d, cfg):
+        return self.inner.state_shape(rotation.padded_dim(d), cfg)
+
+    def mean_flat_stateful(self, flat, state, key, cfg):
+        # The state lives in the (per-step-reseeded) rotated basis — see
+        # docs/DESIGN.md §8 for why EF∘rotation (EF outermost, as built by
+        # registry.resolve) is the production order.
+        d = flat.shape[0]
+        krot = rotation.rotation_key(key)
+        z = rotation.rotate(krot, flat)
+        zbar, new_state = self.inner.mean_flat_stateful(z, state, key, cfg)
+        return rotation.unrotate(krot, zbar, d), new_state
 
     def mean_flat(self, flat, key, cfg):
         d = flat.shape[0]

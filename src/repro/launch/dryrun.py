@@ -35,6 +35,7 @@ from repro.models import encdec as encdec_lib  # noqa: E402
 from repro.models import model as model_lib  # noqa: E402
 from repro.optim import optimizers as opt_lib  # noqa: E402
 from repro.serving import engine  # noqa: E402
+from repro.train import bucketing  # noqa: E402
 from repro.train import train_step as ts  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -110,7 +111,8 @@ def lower_cell(mesh, arch: str, shape_name: str, *, multi_pod: bool,
         plan = ts.grad_sync_plan(mesh, run, aparams, specs)
         if use_ef and plan is not None:
             ef_sds = {bid: _sds(shp, jnp.float32, mesh, P())
-                      for bid, shp in plan.ef_shapes().items()}
+                      for bid, shp in bucketing.ef_state_shapes(
+                          plan, run.compression).items()}
         elif use_ef:
             ef_sds = {k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
                       for k, v in aparams.items()}

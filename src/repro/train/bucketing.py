@@ -28,10 +28,12 @@ This module plans and executes that bucketing:
 
   * :func:`sync_grads_bucketed` — the bucketed replacement for
     train_step.sync_grads: per bucket, pmean over the exact axes and one
-    compressed_mean (encode → single fused collective → decode) over the
-    compressed axes.  Error feedback runs per bucket
-    (core.error_feedback.compressed_mean_ef) with residuals from
-    :func:`init_ef_state`.
+    stateful codec round (encode → single fused collective → decode) over
+    the compressed axes.  Error feedback is just the stateful codec case:
+    the registry resolves an EF-wrapped codec
+    (repro.core.wire.ef.EFCodec) and the per-bucket residuals come from
+    :func:`init_ef_state`, whose shapes the resolved codec declares
+    (``WireCodec.state_shape``).
 
 Numerics vs the per-leaf path: identical for exact buckets (pmean is
 elementwise, and mean-over-eaxes∘mean-over-caxes == mean over both); for
@@ -55,7 +57,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import collectives as coll
-from repro.core import error_feedback as ef_lib
 from repro.core import types as t
 from repro.core import wire
 
@@ -95,11 +96,6 @@ class Bucket:
 class BucketPlan:
     buckets: Tuple[Bucket, ...]
     passthrough: Tuple[str, ...]   # leaves whose spec covers every mesh axis
-
-    def ef_shapes(self) -> Dict[str, Tuple[int, ...]]:
-        """Error-feedback residual shapes, keyed by bucket id."""
-        return {b.bid: (b.size,) for b in self.buckets
-                if b.kind == "compressed"}
 
     def leaf_names(self) -> Tuple[str, ...]:
         return tuple(sorted(
@@ -248,14 +244,13 @@ def bucket_wire_bits(plan: BucketPlan, cfg: t.CompressionConfig,
     (``wire.resolve(cfg).wire_bits``) — the same dispatch rule
     sync_grads_bucketed executes, so accounting can never drift from the
     wire (dense-sim fallbacks are charged dense f32 bits; rotated
-    compositions the inner codec's payload at the rotated length).  One
-    exception stays explicit: error feedback routes every compressed
-    bucket through compressed_mean_ef, whose wire is always the fixed-k EF
-    buffer regardless of encoder kind.
+    compositions the inner codec's payload at the rotated length;
+    error-feedback wraps delegate to their inner codec — residuals are
+    local, so EF costs exactly what the wrapped codec costs).
     """
     if cfg.mode != "gather_decode":
         return {}
-    codec = wire.get("fixed_k") if cfg.error_feedback else wire.resolve(cfg)
+    codec = wire.resolve(cfg)
     return {b.bid: float(codec.wire_bits(n, b.size, cfg))
             for b in plan.buckets if b.kind == "compressed"}
 
@@ -264,10 +259,35 @@ def bucket_wire_bits(plan: BucketPlan, cfg: t.CompressionConfig,
 # The bucketed gradient-sync rule.
 # --------------------------------------------------------------------------- #
 
-def init_ef_state(plan: BucketPlan) -> Dict[str, jax.Array]:
-    """Zero error-feedback residuals, one f32 buffer per compressed bucket."""
+def ef_state_shapes(plan: BucketPlan,
+                    cfg: t.CompressionConfig) -> Dict[str, Tuple[int, ...]]:
+    """Codec state shapes per compressed bucket, keyed by bucket id.
+
+    THE source of truth for the error-feedback residual pytree: the
+    resolved codec declares its state (``WireCodec.state_shape``), so the
+    train step, the dry-run lowering and the initializer can never drift
+    from what ``sync_grads_bucketed`` actually threads.  Empty for
+    stateless configurations.
+    """
+    out = {}
+    for b in plan.buckets:
+        if b.kind != "compressed":
+            continue
+        lcfg = dataclasses.replace(cfg, axes=b.caxes, error_feedback=True)
+        shp = wire.resolve(lcfg).state_shape(b.size, lcfg)
+        if shp is not None:
+            out[b.bid] = shp
+    return out
+
+
+def init_ef_state(plan: BucketPlan,
+                  cfg: t.CompressionConfig) -> Dict[str, jax.Array]:
+    """Zero codec state (EF residuals), one f32 buffer per compressed
+    bucket — shapes derived from the resolved codec via
+    :func:`ef_state_shapes` (this replaced the two hand-rolled residual
+    initializers that used to live here and in core.error_feedback)."""
     return {bid: jnp.zeros(shp, jnp.float32)
-            for bid, shp in plan.ef_shapes().items()}
+            for bid, shp in ef_state_shapes(plan, cfg).items()}
 
 
 def sync_grads_bucketed(grads: Mapping[str, jax.Array], plan: BucketPlan,
@@ -277,6 +297,8 @@ def sync_grads_bucketed(grads: Mapping[str, jax.Array], plan: BucketPlan,
 
     Must run inside shard_map with every mesh axis manual.  Returns
     (synced_grads, new_ef_state); new_ef_state is None iff ef_state is.
+    Passing ``ef_state`` engages the error-feedback codec wrap (the
+    registry resolves ``ef_*``); without it the plain codec runs.
     """
     out = {name: grads[name] for name in plan.passthrough}
     new_ef = {} if ef_state is not None else None
@@ -287,12 +309,16 @@ def sync_grads_bucketed(grads: Mapping[str, jax.Array], plan: BucketPlan,
         else:
             if b.eaxes:
                 v = jax.lax.pmean(v, b.eaxes)
-            lcfg = dataclasses.replace(cmp, axes=b.caxes)
             kb = jax.random.fold_in(key, j)
             if ef_state is not None:
-                v, e = ef_lib.compressed_mean_ef(v, ef_state[b.bid], kb, lcfg)
+                lcfg = dataclasses.replace(cmp, axes=b.caxes,
+                                           error_feedback=True)
+                v, e = coll.compressed_mean_stateful(
+                    v, ef_state[b.bid], kb, lcfg)
                 new_ef[b.bid] = e
             else:
+                lcfg = dataclasses.replace(cmp, axes=b.caxes,
+                                           error_feedback=False)
                 v = coll.compressed_mean(v, kb, lcfg)
         out.update(unpack_bucket(v, b, grads))
     return out, new_ef

@@ -35,7 +35,6 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.configs.base import SHAPES, ArchConfig, RunConfig, ShapeSpec
 from repro.core import collectives as coll
-from repro.core import error_feedback as ef_lib
 from repro.core import types as core_types
 from repro.models import model as model_lib
 from repro.models.common import ShardCtx
@@ -130,12 +129,18 @@ def sync_grads(grads, specs, mesh_axes, cmp: core_types.CompressionConfig,
         if eaxes:
             g = jax.lax.pmean(g, eaxes)
         if caxes and cmp.mode != "none" and g.size >= cmp.min_compress_size:
-            lcfg = dataclasses.replace(cmp, axes=caxes)
             kleaf = jax.random.fold_in(key, i)
             if ef_state is not None:
-                g, e = ef_lib.compressed_mean_ef(g, ef_state[name], kleaf, lcfg)
+                # error feedback == the stateful codec round (the registry
+                # resolves the EF-wrapped codec; repro.core.wire.ef).
+                lcfg = dataclasses.replace(cmp, axes=caxes,
+                                           error_feedback=True)
+                g, e = coll.compressed_mean_stateful(
+                    g, ef_state[name], kleaf, lcfg)
                 new_ef[name] = e
             else:
+                lcfg = dataclasses.replace(cmp, axes=caxes,
+                                           error_feedback=False)
                 g = coll.compressed_mean(g, kleaf, lcfg)
         elif caxes:
             g = jax.lax.pmean(g, caxes)
@@ -250,7 +255,7 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
         params, _ = model_lib.init(key, cfg, ctx, msizes, run)
         opt_state = opt_lib.adamw_init(params)
         if use_ef and plan is not None:
-            ef_state = bucketing.init_ef_state(plan)
+            ef_state = bucketing.init_ef_state(plan, run.compression)
         elif use_ef:
             ef_state = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                     params)
@@ -261,9 +266,11 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
 
     opt_ps = opt_lib.AdamWState(step=P(), m=param_ps, v=param_ps)
     if use_ef and plan is not None:
-        # per-bucket residuals: per-device state; replication is claimed
-        # (P()) but not checked, same as the per-leaf EF specs below.
-        ef_ps = {bid: P() for bid in plan.ef_shapes()}
+        # per-bucket residuals (codec-declared state shapes): per-device
+        # state; replication is claimed (P()) but not checked, same as the
+        # per-leaf EF specs below.
+        ef_ps = {bid: P()
+                 for bid in bucketing.ef_state_shapes(plan, run.compression)}
     elif use_ef:
         ef_ps = param_ps
     else:

@@ -54,6 +54,9 @@ class Trainer:
         self.data = SyntheticLM(cfg, shape, seed=tcfg.seed)
         self.ckpt = ckpt.AsyncCheckpointer()
         self.metrics_history = []
+        # final error-feedback state (per-bucket residuals) after fit();
+        # examples/diagnostics read the residual norms from here.
+        self.ef_state = None
 
     def init_or_restore(self):
         params, opt_state, ef = self.init_fn(jax.random.PRNGKey(self.tcfg.seed))
@@ -85,6 +88,7 @@ class Trainer:
                                extra={"arch": self.cfg.name},
                                keep_last=self.tcfg.keep_last)
         self.ckpt.wait()
+        self.ef_state = ef
         if self.tcfg.ckpt_dir:
             ckpt.save(self.tcfg.ckpt_dir, self.tcfg.steps, params, opt_state,
                       self.specs, extra={"arch": self.cfg.name},

@@ -217,7 +217,7 @@ cfg_ef = mkcfg(encoder=types.EncoderSpec(kind="fixed_k", fraction=0.25,
                mode="shared_support", error_feedback=True)
 plan_ef = bucketing.build_plan(SHAPES, SPECS, MESH_AXES, MSIZES, cfg_ef)
 check("ef.state_keys",
-      set(bucketing.init_ef_state(plan_ef))
+      set(bucketing.init_ef_state(plan_ef, cfg_ef))
       == {b.bid for b in plan_ef.buckets if b.kind == "compressed"})
 
 
@@ -234,7 +234,7 @@ def ef_many(xs, key):
 
     zero = {n: jnp.zeros(SHAPES[n]) for n in SHAPES}
     _, acc = jax.lax.fori_loop(
-        0, 64, body, (bucketing.init_ef_state(plan_ef), zero))
+        0, 64, body, (bucketing.init_ef_state(plan_ef, cfg_ef), zero))
     return {n: acc[n] / 64 for n in acc}
 
 

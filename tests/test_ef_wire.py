@@ -1,0 +1,190 @@
+"""Error feedback as a wire-layer composition (repro.core.wire.ef).
+
+Meshless coverage of the EF plumbing — state shapes driven by the resolved
+codec, the deprecated shim, the contractive-twin wire formats — plus the
+8-device end-to-end run (tests/distributed_checks/ef_wire_check.py,
+launched here as a subprocess: HLO payload identity, contraction,
+registry-preset resolution).
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import simulate_wire_round as _simulate_round
+from repro.configs import registry as cfg_registry
+from repro.core import types, wire
+from repro.train import bucketing
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+N = 8
+
+
+def _cfg(kind, *, mode="gather_decode", center="mean", rotation=False,
+         frac=0.25, ef=True):
+    return types.CompressionConfig(
+        encoder=types.EncoderSpec(kind=kind, fraction=frac, center=center,
+                                  rotation=rotation),
+        mode=mode, axes=("data",), wire_dtype="float32",
+        min_compress_size=1024, error_feedback=ef)
+
+
+# --------------------------------------------------------------------------- #
+# Codec-derived state plumbing (the one residual initializer).
+# --------------------------------------------------------------------------- #
+
+def test_ef_state_shapes_follow_resolved_codec():
+    shapes = {"a": (4096,), "b": (4096,), "tiny": (64,)}
+    specs = {k: (None,) for k in shapes}
+    cfg = _cfg("binary", center="min")
+    plan = bucketing.build_plan(shapes, specs, ("data",), {"data": N}, cfg)
+    shp = bucketing.ef_state_shapes(plan, cfg)
+    want = {b.bid: (b.size,) for b in plan.buckets if b.kind == "compressed"}
+    assert shp == want and want  # tiny rides exact: no state for it
+    state = bucketing.init_ef_state(plan, cfg)
+    assert set(state) == set(want)
+    for bid, v in state.items():
+        assert v.shape == want[bid] and v.dtype == jnp.float32
+        assert not v.any()
+
+
+def test_ef_state_empty_without_compressed_buckets():
+    shapes = {"tiny": (64,)}
+    specs = {"tiny": (None,)}
+    cfg = _cfg("fixed_k")
+    plan = bucketing.build_plan(shapes, specs, ("data",), {"data": N}, cfg)
+    assert bucketing.ef_state_shapes(plan, cfg) == {}
+    assert bucketing.init_ef_state(plan, cfg) == {}
+    cfg_none = types.CompressionConfig(mode="none")
+    plan = bucketing.build_plan({"a": (4096,)}, {"a": (None,)}, ("data",),
+                                {"data": N}, cfg_none)
+    assert bucketing.init_ef_state(plan, cfg_none) == {}
+
+
+def test_ef_round_residual_identity_single_node():
+    """On a one-node 'mesh' (axes=()) the EF estimate is this node's own
+    twin message, so the residual identity e' = (x + e) − est is exact —
+    the telescoping invariant the EF recursion rests on."""
+    cfg = types.CompressionConfig(
+        encoder=types.EncoderSpec(kind="fixed_k", fraction=0.25,
+                                  center="mean"),
+        mode="gather_decode", axes=(), wire_dtype="float32",
+        min_compress_size=0, error_feedback=True)
+    codec = wire.resolve(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2048,))
+    err = jax.random.normal(jax.random.PRNGKey(1), (2048,)) * 0.1
+    est, new_err = codec.mean_flat_stateful(x, err, jax.random.PRNGKey(2),
+                                            cfg)
+    np.testing.assert_allclose(np.asarray(x + err - new_err),
+                               np.asarray(est), rtol=1e-5, atol=1e-6)
+
+
+def test_deprecated_shim_is_the_stateful_codec_round():
+    """compressed_mean_ef forwards to compressed_mean_stateful with
+    error_feedback forced on — the old fixed-k-only body is gone."""
+    from repro.core import error_feedback
+    cfg = types.CompressionConfig(
+        encoder=types.EncoderSpec(kind="binary", center="min"),
+        mode="gather_decode", axes=(), wire_dtype="float32",
+        min_compress_size=0)  # note: error_feedback=False — the shim forces it
+    x = jax.random.normal(jax.random.PRNGKey(5), (512,))
+    err = jnp.zeros((512,))
+    est, new_err = error_feedback.compressed_mean_ef(
+        x, err, jax.random.PRNGKey(6), cfg)
+    cfg_ef = dataclasses.replace(cfg, error_feedback=True)
+    codec = wire.resolve(cfg_ef)
+    want_est, want_err = codec.mean_flat_stateful(x, err,
+                                                  jax.random.PRNGKey(6),
+                                                  cfg_ef)
+    np.testing.assert_allclose(np.asarray(est), np.asarray(want_est),
+                               rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(new_err), np.asarray(want_err),
+                               rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", ["ef_fixed_k", "ef_bernoulli", "ef_binary",
+                                  "ef_ternary", "ef_rotated_binary"])
+def test_ef_round_estimate_is_mean_of_twin_messages(name):
+    """Meshless star round: decode_gathered of twin packs == the average of
+    the per-node twin reconstructions (the m̄_t the telescoping sums)."""
+    cfg_p = cfg_registry.compression_preset(name, axes=("data",))
+    cfg = types.CompressionConfig(
+        encoder=cfg_p.encoder, mode=cfg_p.mode, axes=("data",),
+        wire_dtype="float32", min_compress_size=0, error_feedback=True)
+    codec = wire.resolve(cfg)
+    key = jax.random.PRNGKey(3)
+    xs = jax.random.normal(jax.random.PRNGKey(4), (N, 2048)) * 0.4
+    got = _simulate_round(codec, cfg, xs, key)
+    want = jnp.mean(jnp.stack(
+        [codec.unpack(codec.pack(xs[i], key, i, cfg), i, key, cfg, 2048)
+         for i in range(N)]), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ef_twin_extension_hook():
+    """A codec outside wire/ef.py composes with EF by declaring its own
+    contractive twin (ef_twin_pack / ef_residual_bound) — no edit to the
+    EF dispatch needed; codecs without one fail loudly at wrap time."""
+
+    class IdentityCodec(wire.WireCodec):
+        name = "identity_psum"
+        reduce = "psum"
+
+        def pack(self, flat, key, rank, cfg):
+            return flat
+
+        def unpack(self, row, peer, key, cfg, d):
+            return row
+
+        def decode_reduced(self, w, key, cfg, d):
+            return w
+
+        def ef_twin_pack(self, flat, key, rank, cfg):
+            return flat  # lossless ⇒ the twin is the message itself
+
+        def ef_residual_bound(self, flat, key, cfg):
+            return jnp.zeros(())
+
+    cfg = _cfg("identity")
+    efc = wire.EFCodec(IdentityCodec())
+    x = jnp.arange(8.0)
+    buf = efc.pack(x, jax.random.PRNGKey(0), 0, cfg)
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(x))
+    assert float(efc.residual_bound(x, jax.random.PRNGKey(0), cfg)) == 0.0
+
+    class OpaqueCodec(IdentityCodec):
+        name = "opaque"
+        ef_twin_pack = None
+
+    with pytest.raises(ValueError, match="no contractive twin"):
+        wire.EFCodec(OpaqueCodec()).pack(x, jax.random.PRNGKey(0), 0, cfg)
+
+
+def test_preset_combinations_resolve():
+    for name in ("ternary_opt", "ef_fixed_k", "ef_bernoulli", "ef_binary",
+                 "ef_ternary", "ef_rotated_binary"):
+        cfg = cfg_registry.compression_preset(name, axes=("data",))
+        assert wire.resolve(cfg).name == name
+
+
+# --------------------------------------------------------------------------- #
+# The 8-device end-to-end check (also a CI matrix job of its own).
+# --------------------------------------------------------------------------- #
+
+def test_ef_wire_check_8dev():
+    script = (ROOT / "tests" / "distributed_checks" / "ef_wire_check.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, str(script)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, \
+        f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL EF WIRE CHECKS PASSED" in res.stdout

@@ -143,3 +143,32 @@ def test_rotation_plus_optimal_probs():
     # probs both are decent, but rotation must not catastrophically hurt
     # and typically helps on this data
     assert m_rot < m_plain * 1.5, (m_rot, m_plain)
+
+
+def test_ternary_optimal_probs_dominate_mid_split():
+    """§6-optimal (p1, p2) for the ternary encoder: valid probabilities
+    with the configured pass mass, and per-coordinate variance never above
+    the default mid-split — strictly below off the midpoint
+    (mse.mse_ternary is exact, so the dominance check is exact too)."""
+    for seed, q in [(0, 1 / 16), (1, 0.125), (2, 0.5)]:
+        xs = jax.random.normal(jax.random.PRNGKey(seed), (4, 257)) * 0.4
+        xs = xs.at[:, 0].add(3.0)  # skew off the midpoint
+        p1, p2 = jax.vmap(lambda x: optimal.ternary_optimal_probs(x, q))(xs)
+        np.testing.assert_allclose(np.asarray(p1 + p2), 1.0 - q, rtol=1e-5)
+        assert float(jnp.min(p1)) >= -1e-6 and float(jnp.min(p2)) >= -1e-6
+        c1s = jnp.min(xs, axis=-1)
+        c2s = jnp.max(xs, axis=-1)
+        half = (1.0 - q) / 2.0
+        m_opt = float(mse.mse_ternary(xs, p1, p2, c1s, c2s))
+        m_mid = float(mse.mse_ternary(xs, half, half, c1s, c2s))
+        assert m_opt <= m_mid * (1 + 1e-6), (q, m_opt, m_mid)
+        assert m_opt < 0.95 * m_mid, (q, m_opt, m_mid)  # strict on skew
+
+
+def test_ternary_optimal_probs_constant_vector_lossless():
+    """Degenerate all-equal vector: any split is lossless (Y ≡ x)."""
+    x = jnp.full((64,), 1.7)
+    p1, p2 = optimal.ternary_optimal_probs(x, 0.25)
+    m = float(mse.mse_ternary(x[None], p1[None], p2[None],
+                              jnp.min(x)[None], jnp.max(x)[None]))
+    assert abs(m) < 1e-10, m

@@ -122,28 +122,33 @@ def test_bucket_wire_bits_tracks_dispatch():
                                                    "float32")
         assert bits == want
 
-    # ternary with §6 optimal probs: dispatch falls back to dense_sim,
-    # so the accounting must charge the full n·d·32 dense bits.
+    # ternary with §6 optimal probs rides the same packed 2-bit plane as
+    # uniform ternary (the data-dependent split travels as realized branch
+    # choices), so the accounting charges ternary words — not dense bits.
     cfg = mk(kind="ternary", fraction=0.125, probs="optimal")
-    assert collectives.gather_wire_kind(cfg) == "dense"
+    assert collectives.gather_wire_kind(cfg) == "ternary_opt"
     plan = bucketing.build_plan(shapes, specs, ("data",), {"data": n}, cfg)
     by_bid = {b.bid: b for b in plan.buckets}
     for bid, bits in bucketing.bucket_wire_bits(plan, cfg, n).items():
-        assert bits == n * by_bid[bid].size * 32
+        d_b = by_bid[bid].size
+        cap = comm_cost.bernoulli_capacity(d_b, 0.125)
+        assert bits == n * 32 * bitplane.ternary_wire_words(d_b, cap,
+                                                            "float32")
 
-    # bernoulli with optimal center likewise rides the dense simulation
+    # bernoulli with optimal center still rides the dense simulation
     cfg = mk(kind="bernoulli", fraction=0.125, center="optimal")
     assert collectives.gather_wire_kind(cfg) == "dense"
 
-    # error feedback overrides the encoder kind: every compressed bucket
-    # ships the fixed-k EF wire buffer (kb·BLOCK values + μ)
+    # error feedback is a wire-layer wrap whose residuals stay local: an
+    # EF bucket is charged EXACTLY its inner codec's bits (the old rule —
+    # every EF bucket billed the fixed-k EF buffer — is gone).
     cfg = dataclasses.replace(mk(kind="binary", center="min"),
                               error_feedback=True)
     plan = bucketing.build_plan(shapes, specs, ("data",), {"data": n}, cfg)
     by_bid = {b.bid: b for b in plan.buckets}
     for bid, bits in bucketing.bucket_wire_bits(plan, cfg, n).items():
-        want = n * collectives.fixed_k_wire_slots(
-            by_bid[bid].size, cfg.encoder.fraction) * 32
+        want = n * 32 * bitplane.binary_wire_words(by_bid[bid].size,
+                                                   "float32")
         assert bits == want
 
     # non-gather modes have no gather wire to account

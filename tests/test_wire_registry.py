@@ -29,11 +29,12 @@ N, D = 8, 5000  # D deliberately NOT a power of two nor a multiple of 32
 
 
 def _cfg(kind, *, rotation=False, frac=0.125, center="min", wire="float32",
-         mode="gather_decode", probs="uniform"):
+         mode="gather_decode", probs="uniform", ef=False):
     return types.CompressionConfig(
         encoder=types.EncoderSpec(kind=kind, fraction=frac, center=center,
                                   rotation=rotation, probs=probs),
-        mode=mode, axes=("data",), wire_dtype=wire, min_compress_size=0)
+        mode=mode, axes=("data",), wire_dtype=wire, min_compress_size=0,
+        error_feedback=ef)
 
 
 # one config per registered codec, used by both accounting tests below.
@@ -43,9 +44,16 @@ CODEC_CFGS = {
     "bernoulli": _cfg("bernoulli", center="mean"),
     "binary": _cfg("binary"),
     "ternary": _cfg("ternary"),
+    "ternary_opt": _cfg("ternary", probs="optimal"),
     "dense": _cfg("bernoulli", center="mean", probs="optimal"),
     "rotated_binary": _cfg("binary", rotation=True),
     "rotated_fixed_k": _cfg("fixed_k", rotation=True),
+    "ef_fixed_k": _cfg("fixed_k", ef=True),
+    "ef_fixed_k_shared": _cfg("fixed_k", mode="shared_support", ef=True),
+    "ef_bernoulli": _cfg("bernoulli", center="mean", ef=True),
+    "ef_binary": _cfg("binary", ef=True),
+    "ef_ternary": _cfg("ternary", ef=True),
+    "ef_rotated_binary": _cfg("binary", rotation=True, ef=True),
 }
 
 
@@ -74,11 +82,29 @@ def test_rotation_wraps_any_codec_without_nesting():
         wire.RotatedCodec(rot)
 
 
+def test_ef_wraps_any_codec_without_nesting():
+    # EF composes outermost over any base or rotated codec, on the fly for
+    # combinations without a registered instance, and never over itself.
+    eft = wire.resolve(_cfg("ternary", ef=True))
+    assert eft.name == "ef_ternary" and eft.inner.name == "ternary"
+    efo = wire.resolve(_cfg("ternary", probs="optimal", ef=True))
+    assert efo.name == "ef_ternary_opt" and efo.inner.name == "ternary_opt"
+    efr = wire.resolve(_cfg("fixed_k", rotation=True, ef=True))
+    assert (efr.name == "ef_rotated_fixed_k"
+            and efr.inner.name == "rotated_fixed_k")
+    with pytest.raises(ValueError):
+        wire.EFCodec(eft)
+    with pytest.raises(ValueError):
+        wire.EFCodec(wire.RotatedCodec(wire.get("ef_binary")))
+
+
 def test_gather_wire_kind_delegates_to_registry():
     # the historical dispatch-rule API survives, now registry-backed.
     assert collectives.gather_wire_kind(_cfg("binary")) == "binary"
+    # §6 ternary optimal probs are wire-modelled now (the branch choices
+    # ride the 2-bit plane): no more dense fallback.
     assert collectives.gather_wire_kind(
-        _cfg("ternary", probs="optimal")) == "dense"
+        _cfg("ternary", probs="optimal")) == "ternary_opt"
     assert collectives.gather_wire_kind(
         _cfg("bernoulli", center="optimal")) == "dense"
     # rotation composes on top; the base kind is unchanged.
@@ -125,12 +151,44 @@ def test_rotated_wire_bits_are_inner_at_padded_dim():
                     wire.resolve(plain).wire_bits(N, d, plain)
 
 
+def test_ef_accounting_delegates_to_inner_exactly():
+    """Residuals are wire-free: every EF codec's slots / payload / seed /
+    analytic cost equal its inner codec's, at every probed geometry."""
+    for name, cfg in CODEC_CFGS.items():
+        if not name.startswith("ef_"):
+            continue
+        codec = wire.get(name)
+        plain = dataclasses.replace(cfg, error_feedback=False)
+        inner = wire.resolve(plain)
+        assert codec.inner is inner, (name, codec.inner, inner)
+        for d in (31, 4096, 5000):
+            assert codec.wire_slots(d, cfg) == inner.wire_slots(d, plain)
+            assert codec.wire_bits(N, d, cfg) == inner.wire_bits(N, d, plain)
+            assert codec.comm_cost_bits(N, d, cfg) == \
+                inner.comm_cost_bits(N, d, plain)
+        assert codec.seed_bits(N, cfg) == inner.seed_bits(N, plain)
+
+
+def test_ternary_opt_wire_bits_equal_ternary():
+    """The §6-optimal split changes branch probabilities only — the plane,
+    capacity and cost are the plain ternary codec's."""
+    opt, plain = wire.get("ternary_opt"), wire.get("ternary")
+    cfg_o, cfg_p = CODEC_CFGS["ternary_opt"], CODEC_CFGS["ternary"]
+    for d in (31, 4096, 5000):
+        assert opt.wire_slots(d, cfg_o) == plain.wire_slots(d, cfg_p)
+        assert opt.wire_bits(N, d, cfg_o) == plain.wire_bits(N, d, cfg_p)
+        assert opt.comm_cost_bits(N, d, cfg_o) == \
+            plain.comm_cost_bits(N, d, cfg_p)
+
+
 # --------------------------------------------------------------------------- #
 # HLO: gathered bits == wire_bits, one subprocess for every gather codec.
 # --------------------------------------------------------------------------- #
 
-GATHER_CODECS = ["fixed_k", "bernoulli", "binary", "ternary",
-                 "rotated_binary", "rotated_fixed_k"]
+GATHER_CODECS = ["fixed_k", "bernoulli", "binary", "ternary", "ternary_opt",
+                 "rotated_binary", "rotated_fixed_k",
+                 "ef_fixed_k", "ef_bernoulli", "ef_binary", "ef_ternary",
+                 "ef_rotated_binary"]
 
 _INNER = r"""
 import os
@@ -148,7 +206,8 @@ out = {}
 for name, kw in CFGS.items():
     cfg = types.CompressionConfig(
         encoder=types.EncoderSpec(**kw["encoder"]), mode="gather_decode",
-        axes=("data",), wire_dtype=kw["wire_dtype"], min_compress_size=0)
+        axes=("data",), wire_dtype=kw["wire_dtype"], min_compress_size=0,
+        error_feedback=kw["error_feedback"])
     @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"), P()),
                        out_specs=P(), check_vma=False)
     def f(xs, key):
@@ -171,7 +230,8 @@ def hlo_gathered_bits():
     for name in GATHER_CODECS:
         cfg = CODEC_CFGS[name]
         cfgs[name] = {"encoder": dataclasses.asdict(cfg.encoder),
-                      "wire_dtype": cfg.wire_dtype}
+                      "wire_dtype": cfg.wire_dtype,
+                      "error_feedback": cfg.error_feedback}
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")
     env["WIRE_CFGS"] = json.dumps(cfgs)
@@ -197,7 +257,8 @@ def test_hlo_gathered_bits_match_wire_bits(name, hlo_gathered_bits):
 # Wire formats are meshless-testable: pack rows → decode_gathered.
 # --------------------------------------------------------------------------- #
 
-@pytest.mark.parametrize("name", ["fixed_k", "bernoulli", "binary", "ternary"])
+@pytest.mark.parametrize("name", ["fixed_k", "bernoulli", "binary", "ternary",
+                                  "ternary_opt"])
 def test_decode_gathered_equals_dense_encoders(name):
     """At f32 wire the codec wire path reproduces the dense per-node
     encoders exactly: decode_gathered == mean_i encode(fold_in(key, i))."""
@@ -222,3 +283,36 @@ def test_decode_gathered_equals_dense_encoders(name):
     want = jnp.mean(jnp.stack([dense_y(i) for i in range(N)]), axis=0)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# EF residual contract: one step's residual ≤ the inner codec's worst-case
+# per-step error (hypothesis property; the contraction EF stability needs).
+# --------------------------------------------------------------------------- #
+
+EF_CODECS = [n for n in CODEC_CFGS if n.startswith("ef_")]
+
+
+@pytest.mark.parametrize("name", EF_CODECS)
+def test_ef_one_step_residual_bounded(name):
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    codec = wire.get(name)
+    cfg = CODEC_CFGS[name]
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), d=st.integers(33, 1500),
+           scale=st.floats(1e-3, 1e3), spike=st.floats(0.0, 50.0))
+    def prop(seed, d, scale, spike):
+        key = jax.random.PRNGKey(seed)
+        v = jax.random.normal(jax.random.fold_in(key, 1), (d,)) * scale
+        v = v.at[0].add(spike * scale)  # anisotropy stresses the quantizers
+        buf = codec.pack(v, key, 0, cfg)
+        recon = codec.unpack(buf, 0, key, cfg, d)
+        res = float(jnp.linalg.norm(v - recon))
+        bound = float(codec.residual_bound(v, key, cfg))
+        assert res <= bound * (1 + 1e-5) + 1e-5 * scale, \
+            (name, d, res, bound)
+
+    prop()

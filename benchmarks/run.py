@@ -28,8 +28,13 @@ _ROOT = pathlib.Path(__file__).resolve().parent.parent
 if str(_ROOT) not in sys.path:
     sys.path.insert(0, str(_ROOT))
 
-SCHEMA_REQUIRED = {"schema", "n", "d", "presets"}
+SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap"}
 PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
+OVERLAP_REQUIRED = {"overlap_us", "post_us", "overlap_launches",
+                    "post_launches", "buckets", "schedule"}
+# schedules that must stay in the overlap record for trajectory comparison.
+CORE_OVERLAP_PRESETS = {"none", "fixed_k_1bit", "bernoulli_seed_1bit",
+                        "binary_packed", "ternary_opt", "ef_rotated_binary"}
 # presets that must be present for the trajectory to stay comparable.
 CORE_PRESETS = {"none", "fixed_k_1bit", "bernoulli_seed_1bit",
                 "binary_packed", "ternary_packed", "ternary_opt",
@@ -56,6 +61,16 @@ def validate_schema(res: dict) -> list:
             bad.append(f"preset {name}: missing {sorted(miss)}")
         elif not (e["payload_bytes"] > 0 and e["step_time_us"] > 0):
             bad.append(f"preset {name}: non-positive measurements {e}")
+    missing_ov = CORE_OVERLAP_PRESETS - set(res.get("overlap", {}))
+    if missing_ov:
+        bad.append(f"overlap: missing presets {sorted(missing_ov)}")
+    for name, e in res.get("overlap", {}).items():
+        miss = OVERLAP_REQUIRED - set(e)
+        if miss:
+            bad.append(f"overlap {name}: missing {sorted(miss)}")
+        elif not (e["overlap_us"] > 0 and e["post_us"] > 0
+                  and e["overlap_launches"] == e["post_launches"]):
+            bad.append(f"overlap {name}: bad measurements {e}")
     return bad
 
 
@@ -77,11 +92,12 @@ def main(argv=None) -> None:
                     / "BENCH_collectives.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import bench_collectives
+    from benchmarks import bench_bucketing, bench_collectives
 
     if args.smoke:
         res = bench_collectives.collect(d=1 << 16, reps=1)
         res["smoke"] = True
+        res["overlap"] = bench_bucketing.collect_overlap(smoke=True)
         failed = write_collectives_json(args.json, res)
         if failed:
             print(f"FAILED smoke checks: {failed}", file=sys.stderr)
@@ -89,8 +105,8 @@ def main(argv=None) -> None:
         print("BENCH smoke OK")
         return
 
-    from benchmarks import (bench_bucketing, bench_encode_speed,
-                            bench_quantization, bench_table1, bench_tradeoff)
+    from benchmarks import (bench_encode_speed, bench_quantization,
+                            bench_table1, bench_tradeoff)
     mods = [bench_table1, bench_tradeoff, bench_quantization,
             bench_encode_speed, bench_collectives, bench_bucketing]
     print("name,us_per_call,derived,check")
@@ -103,8 +119,9 @@ def main(argv=None) -> None:
             if not ok:
                 failed.append(r["name"])
     try:
-        # memoized: reuses the sweep bench_collectives.rows() already ran.
+        # memoized: reuses the sweeps the rows() calls above already ran.
         res = bench_collectives.collect()
+        res["overlap"] = bench_bucketing.collect_overlap()
     except RuntimeError as e:
         failed.append(f"collectives.json: {str(e)[-300:]}")
     else:

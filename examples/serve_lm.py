@@ -23,7 +23,7 @@ def main():
 
     prefill_fn, decode_fn, specs, info = engine.build_serve_fns(
         mesh, cfg, run, shape)
-    _, init_fn, _, _ = ts.build_train_step(
+    _, init_fn, _, _, _ = ts.build_train_step(
         mesh, cfg, run, ShapeSpec("t", "train", 32, 4))
     params, _, _ = init_fn(jax.random.PRNGKey(0))
 

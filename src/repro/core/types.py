@@ -113,10 +113,24 @@ class BucketSpec:
         A single leaf larger than this gets a dedicated oversize bucket —
         leaves are never split across buckets, so pack→scatter round-trips
         the pytree bit-exactly.
+      overlap: pipeline the per-bucket collectives into the backward pass
+        (:func:`repro.train.bucketing.overlap_params`): each bucket's
+        pack→collective→unpack is emitted inside the gradient computation
+        at the bucket's readiness point (``Bucket.ready`` — the
+        backward-order index of its last-produced leaf) instead of after
+        the full loss graph.  Numerically schedule-independent: same codec
+        rounds, same PRNG ``fold_in`` chain, so overlapped grads equal the
+        post-backward path bit-for-bit (tests/distributed_checks/
+        overlap_check.py).  Engaged by the train step when
+        ``microbatches == 1``; with grad accumulation the sync runs once on
+        the accumulated grads after the scan (compressed codecs are
+        nonlinear, so per-microbatch sync would change the estimate), and
+        the post-backward path is used regardless of this flag.
     """
 
     enabled: bool = True
     capacity: int = 1 << 22
+    overlap: bool = True
 
     def __post_init__(self):
         if self.capacity <= 0:

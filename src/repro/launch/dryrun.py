@@ -95,9 +95,11 @@ def lower_cell(mesh, arch: str, shape_name: str, *, multi_pod: bool,
         n_dev *= v
     ctx = model_lib.make_ctx(cfg, run, msizes)
     t0 = time.time()
+    sync_info = None
 
     if shape.kind == "train":
-        step_fn, _, specs, bspecs = ts.build_train_step(mesh, cfg, run, shape)
+        step_fn, _, specs, bspecs, plan = ts.build_train_step(
+            mesh, cfg, run, shape)
         aparams, _ = ts.abstract_specs(jax.random.PRNGKey(0), cfg, ctx,
                                        msizes, run)
         p_sds = _param_sds(mesh, aparams, specs)
@@ -108,7 +110,17 @@ def lower_cell(mesh, arch: str, shape_name: str, *, multi_pod: bool,
             v={k: _sds(v.shape, jnp.float32, mesh, P(*specs[k]))
                for k, v in aparams.items()})
         use_ef = run.compression.error_feedback
-        plan = ts.grad_sync_plan(mesh, run, aparams, specs)
+        if plan is not None:
+            # the issue schedule the lowered step executes (DESIGN.md §9):
+            # per-bucket readiness order + whether sync is pipelined into
+            # backward (microbatch accumulation forces post-backward).
+            sync_info = {
+                "buckets": len(plan.buckets),
+                "compressed": sum(1 for b in plan.buckets
+                                  if b.kind == "compressed"),
+                "overlap": ts.overlap_enabled(plan, run),
+                "schedule": list(plan.schedule()),
+            }
         if use_ef and plan is not None:
             ef_sds = {bid: _sds(shp, jnp.float32, mesh, P())
                       for bid, shp in bucketing.ef_state_shapes(
@@ -180,13 +192,19 @@ def lower_cell(mesh, arch: str, shape_name: str, *, multi_pod: bool,
         "params_total": cfg.param_count(),
         "params_active": cfg.active_param_count(),
         "compression": dataclasses_to_str(run.compression),
+        "grad_sync": sync_info,
     }
     return rec, compiled
 
 
 def dataclasses_to_str(c):
-    return (f"{c.mode}:{c.encoder.kind}:f={c.encoder.fraction:.4f}:"
-            f"axes={','.join(c.axes)}" if c.mode != "none" else "none")
+    if c.mode == "none":
+        return "none"
+    s = (f"{c.mode}:{c.encoder.kind}:f={c.encoder.fraction:.4f}:"
+         f"axes={','.join(c.axes)}")
+    if c.bucket.enabled:
+        s += f":bucketed[overlap={'on' if c.bucket.overlap else 'off'}]"
+    return s
 
 
 def run_cell(arch, shape_name, multi_pod, outdir):

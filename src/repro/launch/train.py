@@ -30,6 +30,10 @@ def _parse():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--no-compress", action="store_true")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable backward-pipelined bucket sync "
+                         "(BucketSpec.overlap); keeps the post-backward "
+                         "reference schedule")
     return ap.parse_args()
 
 
@@ -69,6 +73,12 @@ def main():
         cfg = get_config(args.arch)
         shape = SHAPES[args.shape]
         run = get_run_config(args.arch, args.shape)
+    if args.no_overlap:
+        import dataclasses
+        comp = run.compression
+        run = dataclasses.replace(
+            run, compression=dataclasses.replace(
+                comp, bucket=dataclasses.replace(comp.bucket, overlap=False)))
 
     tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
                          ckpt_every=args.ckpt_every,

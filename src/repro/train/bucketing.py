@@ -35,6 +35,20 @@ This module plans and executes that bucketing:
     :func:`init_ef_state`, whose shapes the resolved codec declares
     (``WireCodec.state_shape``).
 
+  * :func:`overlap_params` — the *overlapped* issue schedule
+    (``BucketSpec.overlap``, docs/DESIGN.md §9): instead of syncing the
+    finished grad tree after backward, each bucket's leaves are wrapped in
+    an identity sync point whose ``custom_vjp`` backward rule runs that
+    bucket's :func:`_bucket_round`.  Differentiating the tagged params
+    therefore emits every pack→collective→unpack *inside* the gradient
+    computation, anchored only on its own leaves' cotangents — the bucket's
+    collective becomes issuable the moment its last grad leaf exists
+    (``Bucket.ready``) rather than after the whole loss graph.  The codec
+    rounds and the ``fold_in`` chain are shared with
+    :func:`sync_grads_bucketed` via :func:`_bucket_round`, so the two
+    schedules agree bit-for-bit (enforced by tests/distributed_checks/
+    overlap_check.py for stateless and stateful codecs alike).
+
 Numerics vs the per-leaf path: identical for exact buckets (pmean is
 elementwise, and mean-over-eaxes∘mean-over-caxes == mean over both); for
 compressed buckets the estimate is the same protocol applied to the
@@ -55,6 +69,7 @@ from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import collectives as coll
 from repro.core import types as t
@@ -82,6 +97,15 @@ class Bucket:
     kind "exact": a single pmean over ``eaxes`` (``caxes`` is empty).
     kind "compressed": pmean over ``eaxes`` (if any), then compressed_mean
     over ``caxes``.
+
+    ``ready`` is the bucket's slot in the readiness schedule: the
+    backward-order index of its last-produced leaf.  Leaves are produced in
+    backward in the reverse of their (canonical, sorted-name) forward
+    order, so a bucket's grads are all available once the leaf with the
+    largest backward index has been produced — that index is when the
+    overlapped schedule (:func:`overlap_params`) can issue the bucket's
+    collective.  Purely static metadata: it never enters the numerics (the
+    PRNG chain folds the bucket's *plan position*, not its readiness).
     """
 
     bid: str
@@ -90,6 +114,7 @@ class Bucket:
     eaxes: Tuple[str, ...]
     slots: Tuple[LeafSlot, ...]
     size: int
+    ready: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +126,13 @@ class BucketPlan:
         return tuple(sorted(
             list(self.passthrough)
             + [s.name for b in self.buckets for s in b.slots]))
+
+    def schedule(self) -> Tuple[str, ...]:
+        """Bucket ids in readiness order — the order the overlapped
+        backward can issue their collectives (ties broken by bid so the
+        schedule is deterministic)."""
+        return tuple(b.bid for b in sorted(self.buckets,
+                                           key=lambda b: (b.ready, b.bid)))
 
 
 # --------------------------------------------------------------------------- #
@@ -145,9 +177,24 @@ def build_plan(shapes: Mapping[str, Sequence[int]], specs: Mapping[str, tuple],
                cmp: t.CompressionConfig) -> BucketPlan:
     """Partition a grad tree (given by *global* leaf shapes + specs) into
     buckets.  Deterministic: leaves are visited in sorted-name order and
-    packed first-fit into the open bucket of their signature.
+    packed first-fit into the open bucket of their signature.  The plan —
+    bucket ids, slot offsets AND the readiness schedule — is a pure
+    function of the *sorted* (shapes, specs, mesh, config): shuffling the
+    insertion order of the input mappings cannot change it (hypothesis
+    property in tests/test_plan_stability.py), which is what lets EF state
+    be keyed by bucket id and the overlap schedule agree across processes.
+
+    Readiness: leaf backward order is the reverse of the canonical
+    sorted-name order (model param names sort by layer, and backward
+    produces grads in reverse layer order); ``Bucket.ready`` is the largest
+    backward index over the bucket's slots — the point in backward at which
+    its last grad leaf exists.
     """
     cap = cmp.bucket.capacity
+    names = sorted(shapes)
+    # backward production index per leaf: last forward leaf is produced
+    # first in backward.
+    bwd_index = {name: len(names) - 1 - i for i, name in enumerate(names)}
     open_slots: Dict[tuple, list] = {}
     open_fill: Dict[tuple, int] = {}
     counts: Dict[tuple, int] = {}
@@ -161,10 +208,11 @@ def build_plan(shapes: Mapping[str, Sequence[int]], specs: Mapping[str, tuple],
         counts[sig] = idx + 1
         kind = sig[0]
         caxes, eaxes = sig[1], sig[2]
+        ready = max(bwd_index[s.name] for s in slots)
         buckets.append(Bucket(_bucket_id(kind, caxes, eaxes, idx), kind,
-                              caxes, eaxes, tuple(slots), fill))
+                              caxes, eaxes, tuple(slots), fill, ready))
 
-    for name in sorted(shapes):
+    for name in names:
         shp = shapes[name]
         shp = tuple(shp.shape) if hasattr(shp, "shape") else tuple(shp)
         lshape = local_shape(shp, specs[name], mesh_sizes)
@@ -290,10 +338,38 @@ def init_ef_state(plan: BucketPlan,
             for bid, shp in ef_state_shapes(plan, cfg).items()}
 
 
+def _bucket_round(grads: Mapping[str, jax.Array], b: Bucket, j: int,
+                  cmp: t.CompressionConfig, key, ef):
+    """ONE bucket's sync: pack → (pmean / codec round) → unpack.
+
+    THE shared body of both issue schedules — :func:`sync_grads_bucketed`
+    runs it per bucket after backward, :func:`overlap_params` runs it
+    inside each sync point's backward rule — so the two cannot drift: same
+    ops, same ``fold_in(key, j)`` chain (j = the bucket's *plan position*,
+    never its readiness), hence bit-identical estimates.  ``ef`` is the
+    bucket's residual (engages the stateful EF-wrapped codec) or None.
+    Returns (synced leaf dict, new residual or None).
+    """
+    v = pack_bucket(grads, b)
+    if b.kind == "exact":
+        return unpack_bucket(jax.lax.pmean(v, b.eaxes), b, grads), ef
+    if b.eaxes:
+        v = jax.lax.pmean(v, b.eaxes)
+    kb = jax.random.fold_in(key, j)
+    if ef is not None:
+        lcfg = dataclasses.replace(cmp, axes=b.caxes, error_feedback=True)
+        v, e = coll.compressed_mean_stateful(v, ef, kb, lcfg)
+        return unpack_bucket(v, b, grads), e
+    lcfg = dataclasses.replace(cmp, axes=b.caxes, error_feedback=False)
+    v = coll.compressed_mean(v, kb, lcfg)
+    return unpack_bucket(v, b, grads), None
+
+
 def sync_grads_bucketed(grads: Mapping[str, jax.Array], plan: BucketPlan,
                         cmp: t.CompressionConfig, key,
                         ef_state: Optional[Mapping[str, jax.Array]] = None):
-    """Bucketed replacement for train_step.sync_grads.
+    """Bucketed replacement for train_step.sync_grads (post-backward
+    schedule; the overlapped schedule is :func:`overlap_params`).
 
     Must run inside shard_map with every mesh axis manual.  Returns
     (synced_grads, new_ef_state); new_ef_state is None iff ef_state is.
@@ -303,22 +379,84 @@ def sync_grads_bucketed(grads: Mapping[str, jax.Array], plan: BucketPlan,
     out = {name: grads[name] for name in plan.passthrough}
     new_ef = {} if ef_state is not None else None
     for j, b in enumerate(plan.buckets):
-        v = pack_bucket(grads, b)
-        if b.kind == "exact":
-            v = jax.lax.pmean(v, b.eaxes)
-        else:
-            if b.eaxes:
-                v = jax.lax.pmean(v, b.eaxes)
-            kb = jax.random.fold_in(key, j)
-            if ef_state is not None:
-                lcfg = dataclasses.replace(cmp, axes=b.caxes,
-                                           error_feedback=True)
-                v, e = coll.compressed_mean_stateful(
-                    v, ef_state[b.bid], kb, lcfg)
-                new_ef[b.bid] = e
-            else:
-                lcfg = dataclasses.replace(cmp, axes=b.caxes,
-                                           error_feedback=False)
-                v = coll.compressed_mean(v, kb, lcfg)
-        out.update(unpack_bucket(v, b, grads))
+        ef = (ef_state[b.bid]
+              if ef_state is not None and b.kind == "compressed" else None)
+        synced, e = _bucket_round(grads, b, j, cmp, key, ef)
+        if ef is not None:
+            new_ef[b.bid] = e
+        out.update(synced)
     return out, new_ef
+
+
+# --------------------------------------------------------------------------- #
+# The overlapped issue schedule (BucketSpec.overlap; docs/DESIGN.md §9).
+# --------------------------------------------------------------------------- #
+
+def _sync_point(b: Bucket, j: int, cmp: t.CompressionConfig, stateful: bool):
+    """A per-bucket identity whose backward rule IS the bucket's sync.
+
+    Forward passes the bucket's leaves through untouched; the custom_vjp
+    backward receives exactly those leaves' cotangents — available at the
+    bucket's readiness point (``b.ready``), not after the full loss graph —
+    and returns :func:`_bucket_round` of them.  The residual rides the
+    ``ef`` argument: its "cotangent" is defined to be the bucket's new
+    residual, so ``jax.grad`` w.r.t. the EF pytree returns the updated
+    state (out-of-order bucket completion is safe by construction — each
+    bucket's residual chain touches only its own slot; DESIGN.md §9).  The
+    PRNG key's cotangent is the conventional float0 zero.
+    """
+
+    @jax.custom_vjp
+    def tag(leaves, ef, key):
+        return {n: leaves[n] for n in leaves}
+
+    def fwd(leaves, ef, key):
+        return {n: leaves[n] for n in leaves}, (ef, key)
+
+    def bwd(res, g):
+        ef, key = res
+        synced, new_ef = _bucket_round(g, b, j, cmp, key,
+                                       ef if stateful else None)
+        if not stateful:
+            new_ef = ef
+        key_ct = np.zeros(jnp.shape(key), jax.dtypes.float0)
+        return synced, new_ef, key_ct
+
+    tag.defvjp(fwd, bwd)
+    return tag
+
+
+def overlap_params(params: Mapping[str, jax.Array], plan: BucketPlan,
+                   cmp: t.CompressionConfig, key,
+                   ef_state: Optional[Mapping[str, jax.Array]] = None):
+    """Wrap the param tree with per-bucket sync points (overlap schedule).
+
+    ``loss(overlap_params(p, ...))`` differentiates to the SAME synced
+    grads :func:`sync_grads_bucketed` returns — bit-for-bit, every codec,
+    stateful EF included — but each bucket's pack→collective→unpack is
+    emitted *inside* the gradient computation, anchored only on that
+    bucket's leaf cotangents, so it is issuable as soon as its last grad
+    leaf exists instead of trailing the loss graph (HLO-verified by
+    tests/distributed_checks/overlap_check.py).
+
+    Usage (the train step's overlapped path)::
+
+        def loss2(p, ef):
+            return loss_fn(bucketing.overlap_params(p, plan, cmp, key, ef))
+        (loss, aux), (grads, new_ef) = jax.value_and_grad(
+            loss2, argnums=(0, 1), has_aux=True)(params, ef_state)
+
+    With ``ef_state=None`` pass any pytree (e.g. ``{}``) as the second
+    argument; its gradient is returned unchanged.  Passthrough leaves are
+    left untagged — their grads flow through exactly as in the
+    post-backward schedule.
+    """
+    tagged = dict(params)
+    for j, b in enumerate(plan.buckets):
+        stateful = (ef_state is not None and b.kind == "compressed"
+                    and b.bid in ef_state)
+        ef_b = ef_state[b.bid] if stateful else jnp.zeros((0,), jnp.float32)
+        tag = _sync_point(b, j, cmp, stateful)
+        sub = {s.name: params[s.name] for s in b.slots}
+        tagged.update(tag(sub, ef_b, key))
+    return tagged

@@ -21,11 +21,23 @@ cmp.bucket): leaves sharing a sync signature are packed into a few flat
 f32 buckets and the step issues one collective per bucket instead of one
 per leaf; sync_grads below is the per-leaf reference path (bucket.enabled
 = False), kept for A/B tests and as executable documentation of the rule.
+
+Issue schedule (docs/DESIGN.md §9): with ``cmp.bucket.overlap`` (default
+ON) and no microbatch accumulation, the bucketed sync is *pipelined into
+backward* — the step differentiates the loss of
+``bucketing.overlap_params(params, ...)``, whose per-bucket sync points
+emit each pack→collective→unpack inside the gradient computation at the
+bucket's readiness point (``Bucket.ready``).  Overlapped and
+post-backward schedules are bit-identical by construction (same codec
+rounds, same fold_in chain); ``microbatches > 1`` always syncs the
+accumulated grads after the scan (compressed codecs are nonlinear — one
+codec round per step is the contract, not one per microbatch).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -40,6 +52,8 @@ from repro.models import model as model_lib
 from repro.models.common import ShardCtx
 from repro.optim import optimizers as opt_lib
 from repro.train import bucketing
+
+log = logging.getLogger("repro.train_step")
 
 
 # --------------------------------------------------------------------------- #
@@ -68,6 +82,19 @@ def grad_sync_plan(mesh, run: RunConfig, aparams, specs):
     """
     return bucketing.plan_for_run(aparams, specs, tuple(mesh.axis_names),
                                   mesh_sizes_of(mesh), run.compression)
+
+
+def overlap_enabled(plan, run: RunConfig) -> bool:
+    """THE eligibility rule for the backward-pipelined issue schedule.
+
+    One predicate shared by the step builder, the Trainer and the dry-run
+    record so they can never disagree about which schedule the lowered
+    step executes: bucketed sync + the overlap knob + a single backward
+    (grad accumulation must run its one codec round on the accumulated
+    grads after the scan — DESIGN.md §9).
+    """
+    return (plan is not None and run.compression.bucket.overlap
+            and run.microbatches == 1)
 
 
 # --------------------------------------------------------------------------- #
@@ -159,10 +186,13 @@ def sync_grads(grads, specs, mesh_axes, cmp: core_types.CompressionConfig,
 def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
                      opt_cfg: Optional[opt_lib.AdamWConfig] = None,
                      base_seed: int = 0):
-    """Returns (step_fn, init_fn, specs, batch_specs).
+    """Returns (step_fn, init_fn, specs, batch_specs, sync_plan).
 
     step_fn(params, opt_state, ef_state, batch, step) -> (params, opt_state,
-    ef_state, metrics); everything jit+shard_map'd over `mesh`.
+    ef_state, metrics); everything jit+shard_map'd over `mesh`.  sync_plan
+    is the BucketPlan the step syncs with (None = per-leaf path) — returned
+    so callers introspect/log THE plan the step executes instead of
+    re-deriving it.
     """
     opt_cfg = opt_cfg or opt_lib.AdamWConfig()
     msizes = mesh_sizes_of(mesh)
@@ -179,6 +209,15 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
     # Bucketed sync (repro.train.bucketing): static plan over the abstract
     # grad tree; one collective per bucket instead of one per leaf.
     plan = grad_sync_plan(mesh, run, aparams, specs)
+    # Overlapped issue schedule: pipeline the per-bucket collectives into
+    # backward (eligibility: the shared overlap_enabled predicate).
+    use_overlap = overlap_enabled(plan, run)
+    if plan is not None:
+        n_cmp = sum(1 for b in plan.buckets if b.kind == "compressed")
+        log.info(
+            "grad sync: %d buckets (%d compressed), schedule=%s, overlap=%s",
+            len(plan.buckets), n_cmp, plan.schedule(),
+            "backward-pipelined" if use_overlap else "post-backward")
 
     param_ps = {k: spec_to_pspec(v) for k, v in specs.items()}
     bspecs = batch_pspec(cfg, baxes)
@@ -198,7 +237,23 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
             return loss, metrics
 
         n_mb = run.microbatches
-        if n_mb == 1:
+        if use_overlap:
+            # Overlapped schedule: differentiate the loss of the *tagged*
+            # params — grads come back already synced (each sync point's
+            # backward rule ran its bucket's collective inside the grad
+            # computation), and the grad w.r.t. the EF pytree IS the new
+            # residual state (bucketing.overlap_params).
+            def loss_tagged(p, ef, mb_batch):
+                tagged = bucketing.overlap_params(
+                    p, plan, run.compression, key, ef if use_ef else None)
+                return loss_fn(tagged, mb_batch)
+
+            (loss, metrics), (grads, new_ef) = jax.value_and_grad(
+                loss_tagged, argnums=(0, 1), has_aux=True)(
+                    params, ef_state if use_ef else {}, batch)
+            if not use_ef:
+                new_ef = None
+        elif n_mb == 1:
             (loss, metrics), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
         else:
@@ -215,14 +270,15 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
                 mb_body, (g0, jnp.zeros(())), jnp.arange(n_mb))
             metrics = {}
 
-        if plan is not None:
-            grads, new_ef = bucketing.sync_grads_bucketed(
-                grads, plan, run.compression, key,
-                ef_state if use_ef else None)
-        else:
-            grads, new_ef = sync_grads(
-                grads, specs, mesh_axes, run.compression, key, baxes,
-                ef_state if use_ef else None)
+        if not use_overlap:
+            if plan is not None:
+                grads, new_ef = bucketing.sync_grads_bucketed(
+                    grads, plan, run.compression, key,
+                    ef_state if use_ef else None)
+            else:
+                grads, new_ef = sync_grads(
+                    grads, specs, mesh_axes, run.compression, key, baxes,
+                    ef_state if use_ef else None)
         if use_ef:
             ef_state = new_ef
         # sharding-aware grad norm: per leaf, psum the sum-of-squares over
@@ -285,4 +341,4 @@ def build_train_step(mesh, cfg: ArchConfig, run: RunConfig, shape: ShapeSpec,
     init_fn = jax.jit(compat.shard_map(
         sharded_init, mesh=mesh, in_specs=(P(),),
         out_specs=(param_ps, opt_ps, ef_ps), check_vma=False))
-    return step_fn, init_fn, specs, bspecs
+    return step_fn, init_fn, specs, bspecs, plan

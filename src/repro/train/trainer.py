@@ -48,9 +48,14 @@ class Trainer:
         self.run = run
         self.shape = shape
         self.tcfg = tcfg
-        self.step_fn, self.init_fn, self.specs, self.bspecs = \
-            ts.build_train_step(mesh, cfg, run, shape, opt_cfg,
-                                base_seed=tcfg.seed)
+        # sync_plan is THE grad-sync plan the step executes (None =
+        # per-leaf path): examples/diagnostics read bucket ids + the
+        # readiness schedule from here.
+        (self.step_fn, self.init_fn, self.specs, self.bspecs,
+         self.sync_plan) = ts.build_train_step(mesh, cfg, run, shape,
+                                               opt_cfg, base_seed=tcfg.seed)
+        # (the schedule itself is logged by build_train_step)
+        self.overlap = ts.overlap_enabled(self.sync_plan, run)
         self.data = SyntheticLM(cfg, shape, seed=tcfg.seed)
         self.ckpt = ckpt.AsyncCheckpointer()
         self.metrics_history = []

@@ -1,0 +1,69 @@
+"""Regenerate the golden wire-format matrix (tests/test_golden_wire.py).
+
+For every preset in ``repro.configs.registry.COMPRESSION_PRESETS`` this
+packs a fixed-seed input through the *resolved* codec and records the raw
+wire-buffer bytes.  The committed ``golden_wire.npz`` pins the bit-level
+wire format of every shipped preset: any change to buffer layout, PRNG
+fold_in chains, capacity rules, packing order or wire dtype flips the
+bytes and fails the conformance test — drift that MSE/accounting tests
+cannot see (an estimator can stay unbiased while the wire format silently
+changes under peers' feet).
+
+Regen (ONLY when a wire-format change is intentional):
+
+    PYTHONPATH=src python tests/golden/regen_golden_wire.py
+
+and commit the refreshed .npz together with the change that caused it.
+"""
+from __future__ import annotations
+
+import pathlib
+
+import numpy as np
+
+D = 4096          # power of two: the rotated presets pad to 2^k anyway
+N_RANKS = 2       # two rows exercise the per-rank fold_in chains
+X_SEED = 1234
+KEY_SEED = 99
+
+GOLDEN = pathlib.Path(__file__).resolve().parent / "golden_wire.npz"
+
+
+def build_matrix():
+    """{preset: (bytes uint8 [N_RANKS, nbytes], dtype str, slots int)}."""
+    import jax
+    import jax.numpy as jnp  # noqa: F401  (jax init before repro imports)
+
+    from repro.configs.registry import COMPRESSION_PRESETS, compression_preset
+    from repro.core import wire
+
+    xs = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(X_SEED), (N_RANKS, D)) * 0.5)
+    key = jax.random.PRNGKey(KEY_SEED)
+    out = {}
+    for name in sorted(COMPRESSION_PRESETS):
+        cfg = compression_preset(name, axes=("data",))
+        codec = wire.resolve(cfg)
+        rows = []
+        for r in range(N_RANKS):
+            buf = np.asarray(codec.pack(jnp.asarray(xs[r]), key, r, cfg))
+            rows.append(np.frombuffer(buf.tobytes(), np.uint8))
+        out[name] = (np.stack(rows), str(buf.dtype),
+                     int(codec.wire_slots(D, cfg)))
+    return out
+
+
+def main():
+    mat = build_matrix()
+    arrays = {}
+    for name, (rows, dtype, slots) in mat.items():
+        arrays[f"{name}.bytes"] = rows
+        arrays[f"{name}.dtype"] = np.asarray(dtype)
+        arrays[f"{name}.slots"] = np.asarray(slots)
+    np.savez_compressed(GOLDEN, **arrays)
+    total = sum(a.nbytes for a in arrays.values())
+    print(f"wrote {GOLDEN} ({len(mat)} presets, {total} raw bytes)")
+
+
+if __name__ == "__main__":
+    main()

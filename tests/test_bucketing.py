@@ -172,6 +172,7 @@ def test_bucketed_sync_identity_on_one_device():
 # Multi-device behavior (subprocess: 8 fake CPU devices).
 # --------------------------------------------------------------------------- #
 
+@pytest.mark.distributed
 def test_bucketed_sync_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

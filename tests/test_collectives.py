@@ -8,6 +8,8 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
@@ -20,6 +22,7 @@ def _run(script: str) -> subprocess.CompletedProcess:
         env=env, capture_output=True, text=True, timeout=900)
 
 
+@pytest.mark.distributed
 def test_compressed_mean_collectives():
     res = _run("collectives_check.py")
     assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"

@@ -4,9 +4,12 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
+@pytest.mark.distributed
 def test_dryrun_small_mesh():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

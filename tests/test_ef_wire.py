@@ -178,6 +178,7 @@ def test_preset_combinations_resolve():
 # The 8-device end-to-end check (also a CI matrix job of its own).
 # --------------------------------------------------------------------------- #
 
+@pytest.mark.distributed
 def test_ef_wire_check_8dev():
     script = (ROOT / "tests" / "distributed_checks" / "ef_wire_check.py")
     env = dict(os.environ)

@@ -4,9 +4,12 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
+@pytest.mark.distributed
 def test_fault_tolerance():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

@@ -1,0 +1,69 @@
+"""Golden-bytes codec conformance matrix.
+
+One parametrized test per registered compression preset: pack a fixed-seed
+input through the resolved codec and compare the raw wire-buffer bytes
+against the committed golden (tests/golden/golden_wire.npz).  Catches
+silent wire-format drift — layout, fold_in chains, capacity rules, wire
+dtype — that MSE/accounting tests can't see.  On an *intentional* format
+change, regenerate via
+
+    PYTHONPATH=src python tests/golden/regen_golden_wire.py
+
+and commit the refreshed .npz alongside the change.
+"""
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs.registry import COMPRESSION_PRESETS
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def _regen_module():
+    spec = importlib.util.spec_from_file_location(
+        "regen_golden_wire", GOLDEN_DIR / "regen_golden_wire.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def golden():
+    path = GOLDEN_DIR / "golden_wire.npz"
+    assert path.exists(), (
+        "golden_wire.npz missing — run tests/golden/regen_golden_wire.py")
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+@pytest.fixture(scope="module")
+def current():
+    return _regen_module().build_matrix()
+
+
+def test_golden_covers_every_registered_preset(golden):
+    """Adding/renaming a preset without a golden regen must fail loudly."""
+    have = {k[:-len(".bytes")] for k in golden if k.endswith(".bytes")}
+    assert have == set(COMPRESSION_PRESETS), (
+        f"golden matrix covers {sorted(have)} but the registry ships "
+        f"{sorted(COMPRESSION_PRESETS)} — regenerate tests/golden")
+
+
+@pytest.mark.parametrize("preset", sorted(COMPRESSION_PRESETS))
+def test_wire_bytes_match_golden(preset, golden, current):
+    rows, dtype, slots = current[preset]
+    want = golden[f"{preset}.bytes"]
+    assert str(golden[f"{preset}.dtype"]) == dtype, (
+        f"{preset}: wire dtype changed to {dtype}")
+    assert int(golden[f"{preset}.slots"]) == slots, (
+        f"{preset}: wire_slots changed to {slots}")
+    assert rows.shape == want.shape, (
+        f"{preset}: wire buffer is now {rows.shape[1]} bytes/rank "
+        f"(golden: {want.shape[1]})")
+    if not np.array_equal(rows, want):
+        bad = int(np.sum(rows != want))
+        pytest.fail(f"{preset}: wire bytes drifted ({bad}/{want.size} bytes "
+                    "differ) — if intentional, regen tests/golden")

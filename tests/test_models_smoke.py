@@ -40,7 +40,7 @@ def _steps(arch, compress=False, n=2):
     cfg = smoke_config(arch)
     mesh = smoke_mesh()
     run = smoke_run(arch, compress)
-    step_fn, init_fn, specs, bspecs = ts.build_train_step(
+    step_fn, init_fn, specs, bspecs, _ = ts.build_train_step(
         mesh, cfg, run, SMOKE_TRAIN)
     params, opt_state, ef = init_fn(jax.random.PRNGKey(0))
     data = SyntheticLM(cfg, SMOKE_TRAIN)
@@ -76,7 +76,7 @@ def test_prefill_decode_smoke(arch):
     prefill_fn, decode_fn, specs, info = engine.build_serve_fns(
         mesh, cfg, run, SMOKE_DECODE)
     # init params via the train builder (same specs)
-    _, init_fn, _, _ = ts.build_train_step(mesh, cfg, run, SMOKE_TRAIN)
+    _, init_fn, _, _, _ = ts.build_train_step(mesh, cfg, run, SMOKE_TRAIN)
     params, _, _ = init_fn(jax.random.PRNGKey(0))
 
     data = SyntheticLM(cfg, ShapeSpec("p", "train", 16, 4))

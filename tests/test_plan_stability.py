@@ -1,0 +1,125 @@
+"""Bucket-plan stability: the plan — bucket ids, slot offsets AND the
+readiness schedule — is a pure function of the (abstract shapes, specs,
+mesh, config) *set*, independent of the insertion order of the input
+mappings.  This is the cross-process determinism both the EF bucket-id
+keying and the overlap schedule rely on: every process must derive the
+identical plan from its own traversal of the param tree.
+
+Property-based (hypothesis) over random leaf populations + a deterministic
+seeded-shuffle test so the invariant stays covered where hypothesis isn't
+installed (it skips gracefully, same convention as tests/test_property.py).
+"""
+import random
+
+import pytest
+
+from repro.core import types as core_types
+from repro.train import bucketing
+
+MESH_AXES = ("pod", "data", "model")
+MSIZES = {"pod": 2, "data": 4, "model": 2}
+
+CMP = core_types.CompressionConfig(
+    encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1 / 16),
+    mode="shared_support", axes=("pod", "data"), min_compress_size=1024,
+    bucket=core_types.BucketSpec(capacity=1 << 14))
+
+# leaf spec vocabulary: unsharded, model-sharded, fully-covered (passthrough)
+SPEC_CHOICES = [
+    (None,), ("model",), (None, None), ("model", None),
+    (("pod", "data"), "model"),
+]
+
+
+def _shapes_for(spec, size_hint):
+    """A concrete shape matching the spec's sharded axes divisibility."""
+    if len(spec) == 1:
+        return (max(8, size_hint // 8 * 8),)
+    return (max(8, size_hint // 8 * 8), 16)
+
+
+def _population(rng: random.Random, n_leaves: int):
+    shapes, specs = {}, {}
+    for i in range(n_leaves):
+        spec = rng.choice(SPEC_CHOICES)
+        size = rng.choice([16, 64, 1024, 2048, 4096, 1 << 14, 1 << 15])
+        shapes[f"leaf_{i:03d}"] = _shapes_for(spec, size)
+        specs[f"leaf_{i:03d}"] = spec
+    return shapes, specs
+
+
+def _shuffled(mapping, rng: random.Random):
+    keys = list(mapping)
+    rng.shuffle(keys)
+    return {k: mapping[k] for k in keys}
+
+
+def _plan_fingerprint(plan):
+    return (
+        tuple((b.bid, b.kind, b.caxes, b.eaxes, b.size, b.ready,
+               tuple((s.name, s.offset, s.size, s.shape) for s in b.slots))
+              for b in plan.buckets),
+        plan.passthrough,
+        plan.schedule(),
+    )
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_plan_invariant_under_insertion_order(seed):
+    rng = random.Random(seed)
+    shapes, specs = _population(rng, n_leaves=40)
+    ref = bucketing.build_plan(shapes, specs, MESH_AXES, MSIZES, CMP)
+    for trial in range(4):
+        srng = random.Random(1000 * seed + trial)
+        plan = bucketing.build_plan(_shuffled(shapes, srng),
+                                    _shuffled(specs, srng),
+                                    MESH_AXES, MSIZES, CMP)
+        assert _plan_fingerprint(plan) == _plan_fingerprint(ref)
+        assert plan == ref
+
+
+def test_readiness_is_canonical_not_insertion_order():
+    """ready comes from sorted-name backward order, never dict order."""
+    shapes = {f"leaf_{i:03d}": (2048,) for i in range(6)}
+    specs = {n: (None,) for n in shapes}
+    reversed_insert = {n: shapes[n] for n in sorted(shapes, reverse=True)}
+    p1 = bucketing.build_plan(shapes, specs, MESH_AXES, MSIZES, CMP)
+    p2 = bucketing.build_plan(reversed_insert, specs, MESH_AXES, MSIZES, CMP)
+    assert [b.ready for b in p1.buckets] == [b.ready for b in p2.buckets]
+    assert p1.schedule() == p2.schedule()
+
+
+def test_plan_stability_hypothesis():
+    """Property form: arbitrary populations × arbitrary permutations."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    leaf = st.tuples(st.sampled_from(SPEC_CHOICES),
+                     st.sampled_from([16, 64, 1024, 2048, 4096,
+                                      1 << 14, 1 << 15]))
+
+    @hyp.settings(max_examples=30, deadline=None)
+    @hyp.given(leaves=st.lists(leaf, min_size=1, max_size=48),
+               perm_seed=st.integers(0, 2**31 - 1))
+    def prop(leaves, perm_seed):
+        shapes, specs = {}, {}
+        for i, (spec, size) in enumerate(leaves):
+            shapes[f"leaf_{i:03d}"] = _shapes_for(spec, size)
+            specs[f"leaf_{i:03d}"] = spec
+        ref = bucketing.build_plan(shapes, specs, MESH_AXES, MSIZES, CMP)
+        srng = random.Random(perm_seed)
+        plan = bucketing.build_plan(_shuffled(shapes, srng),
+                                    _shuffled(specs, srng),
+                                    MESH_AXES, MSIZES, CMP)
+        assert _plan_fingerprint(plan) == _plan_fingerprint(ref)
+        # structural sanity on every generated population: full coverage,
+        # contiguous offsets, readiness within range
+        n = len(shapes)
+        placed = [s.name for b in plan.buckets for s in b.slots]
+        assert sorted(placed + list(plan.passthrough)) == sorted(shapes)
+        for b in plan.buckets:
+            assert 0 <= b.ready < n
+            assert b.ready == max(
+                n - 1 - sorted(shapes).index(s.name) for s in b.slots)
+
+    prop()

@@ -186,6 +186,7 @@ def test_compression_preset_unknown_raises():
 # Multi-device behavior (subprocess: 8 fake CPU devices).
 # --------------------------------------------------------------------------- #
 
+@pytest.mark.distributed
 def test_quantized_wire_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

@@ -170,6 +170,7 @@ def test_rotated_payload_is_seed_only_overhead():
 # Multi-device end-to-end (subprocess: 8 fake CPU devices).
 # --------------------------------------------------------------------------- #
 
+@pytest.mark.distributed
 def test_rotated_wire_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

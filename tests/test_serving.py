@@ -22,7 +22,7 @@ def _setup():
                     compression=core_types.CompressionConfig(mode="none"))
     shape = ShapeSpec("serve", "decode", 64, 4)
     fns = engine.build_serve_fns(mesh, cfg, run, shape)
-    _, init_fn, _, _ = ts.build_train_step(mesh, cfg, run,
+    _, init_fn, _, _, _ = ts.build_train_step(mesh, cfg, run,
                                            ShapeSpec("t", "train", 32, 4))
     params, _, _ = init_fn(jax.random.PRNGKey(0))
     return cfg, fns, params

@@ -6,9 +6,12 @@ import pathlib
 import subprocess
 import sys
 
+import pytest
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
+@pytest.mark.distributed
 def test_train_integration():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

@@ -67,7 +67,8 @@ def preset_cfgs():
                                    wire_dtype="float32")
             for k, v in out.items()}
 
-res = {"schema": 1, "n": N, "d": D, "wire_dtype": "float32", "presets": {}}
+res = {"schema": 1, "n": N, "d": D, "reps": REPS, "wire_dtype": "float32",
+       "presets": {}}
 xs = jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32) * 0.3
 key = jax.random.PRNGKey(1)
 for name, cfg in preset_cfgs().items():
@@ -95,7 +96,13 @@ for name, cfg in preset_cfgs().items():
         for x in dims.split(","):
             b *= int(x)
         payload += b * (N if op == "all-reduce" else 1)
-    fj(xs, key).block_until_ready()  # warm
+    fj(xs, key).block_until_ready()  # warm: compile + first-touch allocs
+    fj(xs, key).block_until_ready()  # settle — same discipline as the
+    # overlap + device_step sections, so µs are comparable in kind.  NOTE
+    # step_time_us is still 8 virtual devices serialized on one core at
+    # BENCH_D with a free in-memory wire: absolute µs are NOT comparable
+    # to the overlap section (a whole L-layer MLP step at a much smaller
+    # total grad dim) — bench_device_step models the per-device step.
     t0 = time.perf_counter()
     for _ in range(REPS):
         out = fj(xs, key)

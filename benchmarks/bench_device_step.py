@@ -1,0 +1,162 @@
+"""Modeled per-device step time per registry preset at d = 2²⁰ — the
+compressed-beats-dense gate of the fused-kernel work.
+
+The 8-virtual-device CPU sweeps (bench_collectives/bench_bucketing) time
+all devices serialized on one core with a free in-memory "wire", so they
+can never show the win compression buys on a real link.  This bench models
+one device's step instead:
+
+    modeled_us = pack_us + decode_us (+ unpack_us for stateful EF codecs,
+                 their residual reconstruction) + wire_us
+
+* ``pack_us``/``decode_us``/``unpack_us`` — measured, jitted, single
+  device, on the SAME codec entry points the production collective calls
+  (pack → decode_gathered / decode_reduced), at the production wire dtype.
+  Timing discipline: 2 warm-up calls (compile + allocator settle), REPS
+  timed calls, block_until_ready at the end — identical to the other bench
+  sections so µs are comparable across the JSON record.
+* ``wire_us`` — a ring-collective model over the measured buffer bytes:
+  all-gather moves n·b·(s−1)/s, all-reduce 2·b·(s−1)/s (hlo_cost's
+  roofline convention) at ``BENCH_LINK_MBPS`` (default 100 Mbit/s — a
+  deliberately thin DCN-class link; the paper's regime is wire-bound).
+
+Gate (enforced by benchmarks/run.py --smoke AND the full run): every
+compressed preset's modeled step beats the dense-f32 baselines ("none"
+exact all-reduce and "binary_dense" dense simulation).  This is the
+success metric of the encode/decode wall-clock fix: compression must pay
+for its codec compute at the link the accounting assumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+N = 8
+D_DEFAULT = 1 << 20
+REPS = 3
+DENSE_BASELINES = ("none", "binary_dense")
+
+
+def _link_mbps() -> float:
+    return float(os.environ.get("BENCH_LINK_MBPS", 100.0))
+
+
+def _time(fn, *args) -> float:
+    """µs/call: 2 warm calls, REPS timed, block_until_ready at the end."""
+    jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / REPS * 1e6
+
+
+def _wire_us(row_bytes: float, reduce: str, n: int) -> float:
+    ring = (2.0 if reduce == "psum" else float(n)) * row_bytes * (n - 1) / n
+    return ring * 8.0 / _link_mbps()
+
+
+def _preset_cfgs():
+    from repro.configs import registry as cfg_registry
+    from repro.core import types
+
+    out = {}
+    for name in sorted(cfg_registry.COMPRESSION_PRESETS):
+        out[name] = cfg_registry.compression_preset(name, axes=("data",))
+    out["fixed_k_gather"] = dataclasses.replace(
+        out["fixed_k_1bit"], mode="gather_decode")
+    out["binary_dense"] = dataclasses.replace(
+        out["binary_packed"], mode="dense_sim")
+    out = {k: dataclasses.replace(v, min_compress_size=0)
+           for k, v in out.items()}
+    out["none"] = types.CompressionConfig(mode="none")
+    return out
+
+
+_CACHE: dict = {}
+
+
+def collect(d: int = D_DEFAULT) -> dict:
+    """{preset: {pack_us, decode_us, unpack_us, wire_us, modeled_us,
+    row_bytes}} at dimension d (memoized per d)."""
+    if d in _CACHE:
+        return _CACHE[d]
+    from repro.core import wire
+
+    key = jax.random.PRNGKey(0)
+    flat = jax.random.normal(key, (d,), jnp.float32) * 0.3
+    res = {"d": d, "n": N, "link_mbps": _link_mbps(), "presets": {}}
+    for name, cfg in sorted(_preset_cfgs().items()):
+        if cfg.mode == "none":
+            # exact f32 all-reduce: no codec compute, dense psum wire.
+            entry = {"pack_us": 0.0, "decode_us": 0.0, "unpack_us": 0.0,
+                     "row_bytes": d * 4, "wire_us": _wire_us(d * 4, "psum", N)}
+        else:
+            codec = wire.resolve(cfg)
+            pack = jax.jit(lambda f, k, c=codec, g=cfg: c.pack(f, k, 0, g))
+            pack_us = _time(pack, flat, key)
+            rows = jnp.stack([codec.pack(flat, key, i, cfg)
+                              for i in range(N)])
+            row_bytes = int(rows[0].size) * rows[0].dtype.itemsize
+            if codec.reduce == "psum":
+                wire_buf = jnp.mean(rows.astype(jnp.float32), axis=0)
+                dec = jax.jit(lambda w, k, c=codec, g=cfg:
+                              c.decode_reduced(w, k, g, d))
+                decode_us = _time(dec, wire_buf, key)
+            else:
+                dec = jax.jit(lambda r, k, c=codec, g=cfg:
+                              c.decode_gathered(r, k, g, d, N))
+                decode_us = _time(dec, rows, key)
+            unpack_us = 0.0
+            if codec.stateful:
+                # EF reconstructs its own contribution for the residual.
+                unp = jax.jit(lambda r, k, c=codec, g=cfg:
+                              c.unpack(r, 0, k, g, d))
+                unpack_us = _time(unp, rows[0], key)
+            entry = {"pack_us": pack_us, "decode_us": decode_us,
+                     "unpack_us": unpack_us, "row_bytes": row_bytes,
+                     "wire_us": _wire_us(row_bytes, codec.reduce, N)}
+        entry["modeled_us"] = (entry["pack_us"] + entry["decode_us"]
+                               + entry["unpack_us"] + entry["wire_us"])
+        res["presets"][name] = {k: round(v, 1) if isinstance(v, float) else v
+                                for k, v in entry.items()}
+    _CACHE[d] = res
+    return res
+
+
+def check_compressed_beats_dense(res: dict) -> list:
+    """Presets whose modeled step does NOT beat the dense-f32 baselines
+    (must be empty): the fused-kernel success metric."""
+    p = res["presets"]
+    dense_us = min(p[b]["modeled_us"] for b in DENSE_BASELINES if b in p)
+    return [f"{name}: modeled {e['modeled_us']:.0f}us >= dense "
+            f"{dense_us:.0f}us"
+            for name, e in sorted(p.items())
+            if name not in DENSE_BASELINES
+            and not e["modeled_us"] < dense_us]
+
+
+def rows():
+    t0 = time.perf_counter()
+    res = collect()
+    dt = (time.perf_counter() - t0) * 1e6
+    p = res["presets"]
+    bad = check_compressed_beats_dense(res)
+    dense_us = min(p[b]["modeled_us"] for b in DENSE_BASELINES)
+    worst = max((e["modeled_us"], n) for n, e in p.items()
+                if n not in DENSE_BASELINES)
+    return [{
+        "name": f"device_step.d{res['d']}",
+        "us_per_call": dt,
+        "derived": (f"dense={dense_us / 1e3:.0f}ms worst-compressed="
+                    f"{worst[1]}:{worst[0] / 1e3:.0f}ms @"
+                    f"{res['link_mbps']:.0f}Mbps"
+                    + (f"; FAIL {bad}" if bad else
+                       "; every compressed preset beats dense")),
+        "check": not bad,
+    }]

@@ -6,12 +6,15 @@ machine-readable per-preset payload-bytes + step-time record that the perf
 trajectory tracks across PRs.  Exits non-zero if any paper-invariant check
 fails.
 
-``--smoke`` runs only the JSON-emitting collectives sweep at a small
-dimension and validates the schema — the CI guard against schema breakage
-(fast: no Table-1/tradeoff Monte Carlo).
+``--smoke`` runs the JSON-emitting collectives sweep at a small dimension,
+validates the schema, AND runs the modeled device-step gate at d = 2²⁰
+(bench_device_step): every compressed preset must beat the dense-f32
+baseline in modeled µs/step — the success metric of the fused wire
+kernels.  (No Table-1/tradeoff Monte Carlo.)
 
 Flags:
-  --smoke        small-d collectives sweep + schema check only
+  --smoke        small-d collectives sweep + schema check + the d=2²⁰
+                 compressed-beats-dense device-step gate
   --json PATH    where to write the JSON record (default:
                  BENCH_collectives.json in the repo root)
 """
@@ -28,8 +31,10 @@ _ROOT = pathlib.Path(__file__).resolve().parent.parent
 if str(_ROOT) not in sys.path:
     sys.path.insert(0, str(_ROOT))
 
-SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap"}
+SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap", "device_step"}
 PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
+DEVICE_STEP_REQUIRED = {"pack_us", "decode_us", "unpack_us", "wire_us",
+                        "modeled_us", "row_bytes"}
 OVERLAP_REQUIRED = {"overlap_us", "post_us", "overlap_launches",
                     "post_launches", "buckets", "schedule"}
 # schedules that must stay in the overlap record for trajectory comparison.
@@ -61,6 +66,16 @@ def validate_schema(res: dict) -> list:
             bad.append(f"preset {name}: missing {sorted(miss)}")
         elif not (e["payload_bytes"] > 0 and e["step_time_us"] > 0):
             bad.append(f"preset {name}: non-positive measurements {e}")
+    ds = res.get("device_step", {})
+    missing_ds = CORE_PRESETS - set(ds.get("presets", {}))
+    if missing_ds:
+        bad.append(f"device_step: missing presets {sorted(missing_ds)}")
+    for name, e in ds.get("presets", {}).items():
+        miss = DEVICE_STEP_REQUIRED - set(e)
+        if miss:
+            bad.append(f"device_step {name}: missing {sorted(miss)}")
+        elif not (e["modeled_us"] > 0 and e["wire_us"] > 0):
+            bad.append(f"device_step {name}: non-positive model {e}")
     missing_ov = CORE_OVERLAP_PRESETS - set(res.get("overlap", {}))
     if missing_ov:
         bad.append(f"overlap: missing presets {sorted(missing_ov)}")
@@ -92,13 +107,20 @@ def main(argv=None) -> None:
                     / "BENCH_collectives.json")
     args = ap.parse_args(argv)
 
-    from benchmarks import bench_bucketing, bench_collectives
+    from benchmarks import (bench_bucketing, bench_collectives,
+                            bench_device_step)
 
     if args.smoke:
         res = bench_collectives.collect(d=1 << 16, reps=1)
         res["smoke"] = True
         res["overlap"] = bench_bucketing.collect_overlap(smoke=True)
+        # the device-step gate runs at the FULL d = 2²⁰ even in smoke —
+        # it is the compressed-beats-dense success metric, and the model
+        # is single-device (no 8-device mesh), so it stays CI-affordable.
+        res["device_step"] = bench_device_step.collect()
         failed = write_collectives_json(args.json, res)
+        failed += bench_device_step.check_compressed_beats_dense(
+            res["device_step"])
         if failed:
             print(f"FAILED smoke checks: {failed}", file=sys.stderr)
             sys.exit(1)
@@ -108,7 +130,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_encode_speed, bench_quantization,
                             bench_table1, bench_tradeoff)
     mods = [bench_table1, bench_tradeoff, bench_quantization,
-            bench_encode_speed, bench_collectives, bench_bucketing]
+            bench_encode_speed, bench_collectives, bench_bucketing,
+            bench_device_step]
     print("name,us_per_call,derived,check")
     failed = []
     for m in mods:
@@ -122,6 +145,7 @@ def main(argv=None) -> None:
         # memoized: reuses the sweeps the rows() calls above already ran.
         res = bench_collectives.collect()
         res["overlap"] = bench_bucketing.collect_overlap()
+        res["device_step"] = bench_device_step.collect()
     except RuntimeError as e:
         failed.append(f"collectives.json: {str(e)[-300:]}")
     else:

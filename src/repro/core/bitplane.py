@@ -61,6 +61,7 @@ import jax.numpy as jnp
 
 from repro.core import encoders
 from repro.core import types as t
+from repro.kernels.bernoulli_wire import ref as bw_ref
 from repro.kernels.bitplane import ops as bp_ops
 
 WORD = 32
@@ -112,10 +113,13 @@ def rank_scatter(values, sent, cap: int):
     buffer, the ternary pass-through segment and the error-feedback twins:
     ranks ≥ ``cap`` are dropped (the decoder regenerates the same ranks and
     drops them symmetrically).  Returns a (cap,) f32 buffer.
+
+    Despite the name this is implemented as a rank-*select* gather
+    (repro.kernels.bernoulli_wire.ref.rank_select): byte-identical slots to
+    the historical d-wide ``.at[idx].set`` scatter, but ~10× faster on the
+    CPU backend, where XLA lowers large scatters serially.
     """
-    pos = jnp.cumsum(sent.astype(jnp.int32)) - 1
-    idx = jnp.where(sent & (pos < cap), pos, cap)  # cap == out-of-bounds
-    return jnp.zeros((cap,), jnp.float32).at[idx].set(values, mode="drop")
+    return bw_ref.rank_select(values.astype(jnp.float32), sent, cap)
 
 
 # --------------------------------------------------------------------------- #

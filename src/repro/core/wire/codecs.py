@@ -33,6 +33,7 @@ from repro.core import comm_cost
 from repro.core import encoders
 from repro.core import types as t
 from repro.core.wire import base
+from repro.kernels.bernoulli_wire import ops as bw_ops
 from repro.kernels.fixed_k_encode import ops as fk
 
 
@@ -217,11 +218,12 @@ def bernoulli_pack(flat, key, p: float, cap: int, mu, *, scaled=True):
     instead of the unbiased 1/p rescale — the error-feedback twin
     (repro.core.wire.ef); the layout is identical, so
     :func:`bernoulli_unpack` decodes both.
+
+    Dispatches through :mod:`repro.kernels.bernoulli_wire` — the fused
+    sample+select+rank-compact Pallas kernel on TPU, the byte-identical jnp
+    reference elsewhere (golden wire matrix pins the bytes).
     """
-    d = flat.shape[0]
-    sent = _bernoulli_support(key, d, p)
-    vals = flat / p - (1.0 - p) / p * mu if scaled else flat
-    return bitplane.rank_scatter(vals, sent, cap)
+    return bw_ops.encode(flat, key, p, cap, mu, scaled=scaled)
 
 
 def bernoulli_unpack(buf, key, p: float, cap: int, mu, d: int):
@@ -278,6 +280,20 @@ class BernoulliCodec(base.WireCodec):
         row = row.astype(jnp.float32)
         return bernoulli_unpack(row[:-1], jax.random.fold_in(key, peer),
                                 p, cap, row[-1], d)
+
+    def decode_gathered(self, rows, key, cfg, d, n):
+        # fused regenerate+unpack+accumulate: all peer supports in one
+        # batched Threefry dispatch (CPU) or one Pallas kernel folding the
+        # n buffers straight into a single (d,) accumulator (TPU) — never
+        # n dense per-peer reconstructions.  Same estimate as the default
+        # sequential fori decode up to summation order.
+        p = float(cfg.encoder.fraction)
+        cap = comm_cost.bernoulli_capacity(d, p)
+        rows = rows.astype(jnp.float32)
+        keys = jnp.stack([jax.random.fold_in(key, i) for i in range(n)])
+        total = bw_ops.decode_sum(rows[:, :-1], rows[:, -1], keys,
+                                  p, cap, d)
+        return total / n
 
 
 # --------------------------------------------------------------------------- #
@@ -384,16 +400,28 @@ class DenseSimCodec(base.WireCodec):
     encoder (incl. the §6 optimal-probability policies, whose message
     sizes are data-dependent and not wire-modelled yet).  Charged naive
     dense f32 bits — the wire it actually rides.
+
+    The wire is PINNED to float32: ``pack`` casts to f32 regardless of
+    ``cfg.wire_dtype`` (a narrower psum buffer would change the reduce
+    arithmetic and silently break estimate-distribution equality with
+    gather_decode), and ``wire_bits`` charges the matching 32 bits/slot.
+    ``cfg.wire_dtype`` therefore deliberately does NOT apply here; the
+    contract is pinned by tests/test_dense_codec_contract.py.
     """
 
     name = "dense"
     reduce = "psum"
 
+    #: the psum wire's element width in bits — always f32, see class doc.
+    WIRE_BITS_PER_SLOT = 32
+
     def wire_slots(self, d, cfg):
         return d
 
     def wire_bits(self, n, d, cfg):
-        return float(n * d * 32)
+        # intentionally ignores cfg.wire_dtype: the buffer pack() emits is
+        # f32 whatever the config says, and accounting follows the bytes.
+        return float(n * d * self.WIRE_BITS_PER_SLOT)
 
     def cost_spec(self, d, cfg):
         return t.CommSpec(protocol="naive", r_bits=32), {}

@@ -33,6 +33,7 @@ from __future__ import annotations
 from repro.core import rotation
 from repro.core import types as t
 from repro.core.wire import base
+from repro.kernels.rotated_encode import ops as ro_ops
 
 
 class RotatedCodec(base.WireCodec):
@@ -75,6 +76,12 @@ class RotatedCodec(base.WireCodec):
     # ---- wire format: rotate before pack, unrotate after decode ----------- #
 
     def pack(self, flat, key, rank, cfg):
+        if self.inner.name == "binary":
+            # fused rotate+encode: one kernel pair instead of
+            # FWHT / min-max / threshold / pack round trips on TPU; the
+            # dispatcher falls back to exactly the chain below off-TPU
+            # (repro.kernels.rotated_encode).
+            return ro_ops.pack_binary(flat, key, rank, cfg.wire_dtype)
         z = rotation.rotate(rotation.rotation_key(key), flat)
         return self.inner.pack(z, key, rank, cfg)
 

@@ -1,0 +1,49 @@
+"""Module-level backend selection for the Pallas kernel layer.
+
+Historically each kernels/*/ops.py asked ``jax.default_backend()`` *inside*
+its dispatch functions.  Under ``jax.jit`` that query runs at trace time, so
+whichever backend happened to be active when a caller first traced got baked
+into the cached executable — a CPU-traced function shipped the slow lowered
+interpret path to TPU callers and vice versa.  This module evaluates the
+backend ONCE at import, before any tracing, and every kernel dispatcher
+reads the resulting constants.
+
+Explicit override, for tests and debugging, via ``REPRO_KERNEL_BACKEND``:
+
+* ``auto``              — Pallas on TPU, jnp reference elsewhere (default);
+* ``ref``               — always the jnp oracle;
+* ``pallas``            — always the compiled Pallas kernel;
+* ``pallas_interpret``  — always the Pallas kernel in interpret mode (how
+  CI exercises kernel bodies on CPU; see the kernel-interpret tier-1 job).
+
+Dispatchers also accept ``force_pallas=True`` per call, which upgrades
+``auto``/``ref`` to the Pallas path (interpret mode off-TPU) without
+touching the environment — the hook the oracle-equivalence tests use.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+ON_TPU = jax.default_backend() == "tpu"
+
+_VALID = ("auto", "ref", "pallas", "pallas_interpret")
+MODE = os.environ.get("REPRO_KERNEL_BACKEND", "auto").lower()
+if MODE not in _VALID:  # fail loudly: a typo silently falling back to
+    raise ValueError(   # "auto" would make the CI interpret job vacuous.
+        f"REPRO_KERNEL_BACKEND={MODE!r} not in {_VALID}")
+
+
+def choose(force_pallas: bool = False):
+    """Resolve to ``(use_pallas, interpret)`` for one dispatch site."""
+    mode = MODE
+    if force_pallas and mode in ("auto", "ref"):
+        mode = "pallas" if ON_TPU else "pallas_interpret"
+    if mode == "ref":
+        return False, False
+    if mode == "pallas":
+        return True, False
+    if mode == "pallas_interpret":
+        return True, True
+    return (True, False) if ON_TPU else (False, False)

@@ -1,0 +1,1 @@
+from repro.kernels.bernoulli_wire import ops, ref  # noqa: F401

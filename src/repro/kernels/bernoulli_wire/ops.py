@@ -1,0 +1,43 @@
+"""Dispatch for the fused Bernoulli wire kernels.
+
+Backend policy lives in :mod:`repro.kernels.backend` (resolved once at
+import, never inside a trace): TPU → fused Pallas kernels
+(repro.kernels.bernoulli_wire.kernel), everything else → the fast jnp
+reference (repro.kernels.bernoulli_wire.ref), which is byte-identical on
+the wire to the historical codec op chain (golden matrix).  Tests force the
+Pallas path off-TPU with ``force_pallas=True`` (interpret mode) or
+``REPRO_KERNEL_BACKEND=pallas_interpret``.
+
+``p``, ``cap`` and ``d`` are static Python values (they come from the
+compression config), so these helpers are safe to call under an outer
+``jax.jit``.
+"""
+from __future__ import annotations
+
+from repro.kernels import backend
+from repro.kernels.bernoulli_wire import kernel, ref
+
+
+def encode(flat, key, p: float, cap: int, mu, *, scaled: bool = True,
+           force_pallas: bool = False):
+    """(d,) f32 + rank-folded (2,) key -> (cap,) f32 wire value buffer."""
+    use_pallas, interpret = backend.choose(force_pallas)
+    if use_pallas:
+        return kernel.encode_pallas(flat, key, mu, p=p, cap=cap,
+                                    scaled=scaled, interpret=interpret)
+    return ref.encode(flat, key, p, cap, mu, scaled=scaled)
+
+
+def decode_sum(bufs, mus, keys, p: float, cap: int, d: int, *,
+               force_pallas: bool = False):
+    """(n, cap) buffers + (n,) μ + (n, 2) keys -> Σ_i recon_i as (d,) f32.
+
+    Caller divides by n for the mean.  The jnp path regenerates all peer
+    supports in one batched Threefry dispatch; the Pallas path folds peers
+    into the accumulator without dense per-peer intermediates.
+    """
+    use_pallas, interpret = backend.choose(force_pallas)
+    if use_pallas:
+        return kernel.decode_sum_pallas(bufs, mus, keys, p=p, cap=cap,
+                                        d=d, interpret=interpret)
+    return ref.decode_sum(bufs, mus, keys, p, cap, d)

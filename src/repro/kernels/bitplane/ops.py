@@ -4,12 +4,17 @@ TPU -> fused Pallas kernel; CPU -> pure-jnp oracle (``force_pallas=True``
 runs the kernel in interpret mode for equivalence tests).  Both produce the
 identical word stream (verified in tests/test_bitplane.py), so wire buffers
 are portable across backends.
+
+Backend policy comes from repro.kernels.backend, which resolves the device
+ONCE at import: the old per-call ``jax.default_backend()`` query ran at
+*trace* time, so whichever backend first traced a caller got baked into the
+cached executable.  ``REPRO_KERNEL_BACKEND`` overrides for tests/CI.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend
 from repro.kernels.bitplane import bitplane as _kernel
 from repro.kernels.bitplane import ref as _ref
 
@@ -22,27 +27,27 @@ def pack_bits(vals, width: int, *, force_pallas: bool = False):
 
     Returns (ceil(n*width/32),) uint32 with the ref.py layout.
     """
-    on_tpu = jax.default_backend() == "tpu"
+    use_pallas, interpret = backend.choose(force_pallas)
     flat = jnp.asarray(vals).reshape(-1).astype(jnp.uint32)
     d = flat.shape[0]
-    if not (on_tpu or force_pallas):
+    if not use_pallas:
         return _ref.pack_bits(flat, width)
     nw = num_words(d, width)
     tile = _kernel.BM_PACK * _kernel.LANES
     flat = jnp.pad(flat, (0, (-d) % tile))
     packed = _kernel.pack_bits_2d(flat.reshape(-1, _kernel.LANES), width,
-                                  interpret=not on_tpu)
+                                  interpret=interpret)
     return packed.reshape(-1)[:nw]
 
 
 def unpack_bits(words, width: int, d: int, *, force_pallas: bool = False):
     """Inverse of :func:`pack_bits`: (nw,) uint32 words -> (d,) symbols."""
-    on_tpu = jax.default_backend() == "tpu"
+    use_pallas, interpret = backend.choose(force_pallas)
     flat = jnp.asarray(words).reshape(-1)
-    if not (on_tpu or force_pallas):
+    if not use_pallas:
         return _ref.unpack_bits(flat, width, d)
     tile = _kernel.BM_UNPACK * _kernel.LANES
     flat = jnp.pad(flat, (0, (-flat.shape[0]) % tile))
     vals = _kernel.unpack_bits_2d(flat.reshape(-1, _kernel.LANES), width,
-                                  interpret=not on_tpu)
+                                  interpret=interpret)
     return vals.reshape(-1)[:d]

@@ -12,9 +12,7 @@ block-diagonal rotation; standard bucketing — see DESIGN.md §2).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
+from repro.kernels import backend
 from repro.kernels.hadamard import hadamard as _kernel
 from repro.kernels.hadamard import ref as _ref
 
@@ -39,11 +37,11 @@ def fwht(x, *, force_pallas: bool = False, interpret: bool | None = None):
     if d > MAX_D:
         raise ValueError(f"fwht supports d ≤ {MAX_D}; chunk the input "
                          "(repro.core.compression handles this)")
-    on_tpu = jax.default_backend() == "tpu"
-    if not (on_tpu or force_pallas):
+    use_pallas, auto_interpret = backend.choose(force_pallas)
+    if not use_pallas:
         return _ref.fwht(x)
     if interpret is None:
-        interpret = not on_tpu
+        interpret = auto_interpret
     shape = x.shape
     x2 = x.reshape(-1, d)
     if d < 4:  # degenerate sizes: oracle

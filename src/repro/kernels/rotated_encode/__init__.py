@@ -1,0 +1,1 @@
+from repro.kernels.rotated_encode import ops, ref  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.threefry import ref  # noqa: F401

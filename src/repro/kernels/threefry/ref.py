@@ -1,0 +1,98 @@
+"""Bit-exact jnp reimplementation of JAX's Threefry-2x32 PRNG.
+
+The §4.4 seed-trick wire paths draw their supports with
+``jax.random.uniform(key, (d,))`` — the committed golden wire bytes
+(tests/golden/golden_wire.npz) pin those exact draws.  A fused Pallas
+encode/decode kernel therefore cannot use a cheaper in-register hash (the
+way the non-wire kernels use :mod:`repro.kernels.prng`): it must reproduce
+XLA's Threefry stream bit-for-bit or the wire format silently drifts.
+
+This module is that stream, written in plain uint32 jnp/lax ops that work
+identically inside Pallas kernel bodies and in XLA — the single source of
+truth the fused wire kernels (repro.kernels.bernoulli_wire,
+repro.kernels.rotated_encode) inline and their oracles call.  Bit-exactness
+against ``jax.random.uniform`` / ``jax.random.bits`` is pinned by
+tests/test_threefry_ref.py across seeds, lengths and parities.
+
+Counter layout (must match jax._src.prng.threefry_random_bits): for shape
+(d,) the raw counter ``arange(d)`` is zero-padded to 2·⌈d/2⌉, split in
+half — NOT interleaved — so lane j < half comes from cipher output x0 of
+the pair (j, half + j) and lane j ≥ half from x1 of (j − half, j).  The
+zero pad means the last x1 counter is 0 when d is odd.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Threefry-2x32 constants: key-schedule parity word and the 4-round
+# rotation schedules (20 rounds = 5 groups of 4, alternating schedules).
+_PARITY = 0x1BD11BDA
+_ROTATIONS = ((13, 15, 26, 6), (17, 29, 16, 24))
+
+
+def _rotl(x, r: int):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, x0, x1):
+    """The 20-round Threefry-2x32 block cipher on uint32 arrays.
+
+    ``k0, k1`` are the key words (scalars or arrays broadcastable to the
+    counters), ``x0, x1`` the counter words.  Returns the two output words.
+    Pure uint32 ops — usable verbatim inside a Pallas kernel body.
+    """
+    k0 = jnp.asarray(k0, jnp.uint32)
+    k1 = jnp.asarray(k1, jnp.uint32)
+    ks = (k0, k1, k0 ^ k1 ^ jnp.uint32(_PARITY))
+    x0 = jnp.asarray(x0, jnp.uint32) + ks[0]
+    x1 = jnp.asarray(x1, jnp.uint32) + ks[1]
+    for group in range(5):
+        for r in _ROTATIONS[group % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(group + 1) % 3]
+        x1 = x1 + ks[(group + 2) % 3] + jnp.uint32(group + 1)
+    return x0, x1
+
+
+def counter_words(idx, d: int):
+    """The (x0, x1) counter words feeding coordinate ``idx`` of a (d,) draw.
+
+    ``idx`` is any uint32 array of flat coordinate indices < d.  Encodes the
+    split-halves layout above so callers (kernels) can evaluate scattered
+    coordinate blocks without materializing the full counter array.
+    """
+    idx = jnp.asarray(idx, jnp.uint32)
+    half = (d + 1) // 2
+    lo = idx < half                       # lane from x0 of pair (idx, idx+half)
+    pair = jnp.where(lo, idx, idx - half)
+    c1 = pair + jnp.uint32(half)
+    # zero pad: counter positions ≥ d hold 0 (odd-d last x1 word).
+    c1 = jnp.where(c1 < d, c1, jnp.uint32(0))
+    return pair, c1, lo
+
+
+def random_bits(key, d: int):
+    """Bit-exact ``jax.random.bits(key, (d,), 'uint32')`` for raw (2,) keys."""
+    key = jnp.asarray(key).reshape(2).astype(jnp.uint32)
+    half = (d + 1) // 2
+    cnt = jnp.arange(d, dtype=jnp.uint32)
+    cnt = jnp.pad(cnt, (0, 2 * half - d))
+    o0, o1 = threefry2x32(key[0], key[1], cnt[:half], cnt[half:])
+    return jnp.concatenate([o0, o1])[:d]
+
+
+def bits_to_uniform(bits):
+    """uint32 bits -> U[0, 1) float32, exactly as jax.random.uniform does:
+    fill the f32 mantissa (value in [1, 2)), subtract 1, clamp at 0."""
+    fbits = (bits >> jnp.uint32(9)) | jnp.uint32(0x3F800000)
+    return jnp.maximum(
+        jax.lax.bitcast_convert_type(fbits, jnp.float32) - jnp.float32(1.0),
+        jnp.float32(0.0))
+
+
+def uniform(key, d: int):
+    """Bit-exact ``jax.random.uniform(key, (d,), jnp.float32)``."""
+    return bits_to_uniform(random_bits(key, d))

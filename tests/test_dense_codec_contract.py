@@ -1,0 +1,50 @@
+"""Pins the DenseSimCodec accounting contract: the psum wire is float32
+regardless of ``cfg.wire_dtype``, and ``wire_bits`` charges the matching
+32 bits/slot.  Guards against the drift where pack() casts f32 while the
+accounting silently follows the (inapplicable) wire_dtype knob — the bits
+charged must always describe the buffer actually reduced."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import types as t
+from repro.core.wire import codecs
+
+D, N = 257, 8
+
+
+def _cfg(wire_dtype):
+    return t.CompressionConfig(
+        encoder=t.EncoderSpec(kind="bernoulli", fraction=0.25,
+                              center="mean"),
+        mode="dense_sim", wire_dtype=wire_dtype)
+
+
+@pytest.mark.parametrize("wire_dtype", ("float32", "bfloat16", "float16"))
+def test_pack_is_always_f32(wire_dtype):
+    codec = codecs.DenseSimCodec()
+    buf = codec.pack(jnp.ones((D,)), jax.random.PRNGKey(0), 3,
+                     _cfg(wire_dtype))
+    assert buf.dtype == jnp.float32
+    assert buf.shape == (D,)
+
+
+@pytest.mark.parametrize("wire_dtype", ("float32", "bfloat16", "float16"))
+def test_wire_bits_charge_the_f32_buffer(wire_dtype):
+    codec = codecs.DenseSimCodec()
+    cfg = _cfg(wire_dtype)
+    assert codec.wire_slots(D, cfg) == D
+    assert codec.wire_bits(N, D, cfg) == float(
+        N * D * codecs.DenseSimCodec.WIRE_BITS_PER_SLOT)
+    assert codecs.DenseSimCodec.WIRE_BITS_PER_SLOT == 32
+
+
+def test_accounting_matches_buffer_bytes():
+    """bits == n · buffer.size · buffer.itemsize · 8 — the invariant the
+    class doc promises, checked against the real packed array."""
+    codec = codecs.DenseSimCodec()
+    cfg = _cfg("bfloat16")
+    buf = np.asarray(codec.pack(jnp.ones((D,)), jax.random.PRNGKey(1), 0,
+                                cfg))
+    assert codec.wire_bits(N, D, cfg) == N * buf.size * buf.itemsize * 8

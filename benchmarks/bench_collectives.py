@@ -120,6 +120,92 @@ print(json.dumps(res))
 """
 
 
+# One forced-device-count process per simulated node count: flat vs
+# hierarchical cross-host traffic + wall-clock for the linear gather codecs
+# (docs/DESIGN.md §11).  Cross-host = any collective whose replica group
+# spans two inner blocks (device linear id = pod*n_in + data).
+_NODE_INNER = r"""
+import os
+N = int(os.environ["BENCH_N"])
+N_IN = int(os.environ.get("BENCH_N_IN", 2))
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N}"
+import dataclasses, functools, json, re, time
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro import compat
+from repro.configs import registry as cfg_registry
+from repro.core import collectives, wire
+
+D = int(os.environ.get("BENCH_D", 1 << 18))
+REPS = int(os.environ.get("BENCH_REPS", 3))
+mesh = Mesh(np.array(jax.devices()).reshape(N // N_IN, N_IN),
+            ("pod", "data"))
+MSIZES = {"pod": N // N_IN, "data": N_IN}
+
+def cross_host_bytes(txt):
+    nbytes = {"f32": 4, "u32": 4, "bf16": 2}
+    total = 0.0
+    for line in txt.splitlines():
+        m = re.search(r"= (f32|u32|bf16)\[([\d,]*)\]\S* "
+                      r"(all-gather|all-reduce)(?:-start)?\(", line)
+        if not m:
+            continue
+        g = re.search(r"replica_groups=\{\{([\d,{} ]*)\}\}", line)
+        if not g:
+            continue
+        groups = [[int(v) for v in grp.split(",") if v.strip()]
+                  for grp in g.group(1).split("},{")]
+        if not any(len({i // N_IN for i in grp}) > 1 for grp in groups):
+            continue
+        b = nbytes[m.group(1)]
+        for v in m.group(2).split(","):
+            if v:
+                b *= int(v)
+        total += b * (N if m.group(3) == "all-reduce" else 1)
+    return total
+
+def bench(cfg):
+    @functools.partial(compat.shard_map, mesh=mesh,
+                       in_specs=(P(("pod", "data")), P()), out_specs=P(),
+                       check_vma=False, check_rep=False)
+    def f(x, k):
+        return collectives.compressed_mean(x.reshape(D), k, cfg)
+    fj = jax.jit(f)
+    comp = fj.lower(jax.ShapeDtypeStruct((N, D), jnp.float32),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
+    xs = jax.random.normal(jax.random.PRNGKey(0), (N, D), jnp.float32) * 0.3
+    key = jax.random.PRNGKey(1)
+    fj(xs, key).block_until_ready()
+    fj(xs, key).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fj(xs, key)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) / REPS * 1e6
+    return us, cross_host_bytes(comp.as_text())
+
+res = {"n": N, "n_in": N_IN, "d": D, "reps": REPS, "codecs": {}}
+for name in ("bernoulli", "fixed_k"):
+    hier = dataclasses.replace(
+        cfg_registry.compression_preset("hier_" + name),
+        wire_dtype="float32", min_compress_size=0)
+    flat = dataclasses.replace(hier, axes=("pod", "data"), inner_axes=(),
+                               scatter_decode=False)
+    flat_us, flat_cross = bench(flat)
+    hier_us, hier_cross = bench(hier)
+    n_eff = wire.effective_nodes(hier, N, MSIZES)
+    res["codecs"][name] = {
+        "flat_us": flat_us, "hier_us": hier_us,
+        "flat_payload_bytes": flat_cross,
+        "hier_cross_bytes": hier_cross,
+        "accounted_cross_bytes":
+            wire.resolve(hier).wire_bits(n_eff, D, hier) / 8,
+    }
+print(json.dumps(res))
+"""
+
+
 _CACHE: dict = {}
 
 
@@ -146,6 +232,67 @@ def collect(d: int | None = None, reps: int = 3, timeout: int = 900) -> dict:
     res = json.loads(proc.stdout.strip().splitlines()[-1])
     _CACHE[(d, reps)] = res
     return res
+
+
+def collect_node_sweep(ns: tuple = (4, 8, 16), d: int = 1 << 18,
+                       reps: int = 3, timeout: int = 900) -> dict:
+    """Flat vs hierarchical collectives across simulated node counts.
+
+    One subprocess per n (the fake-device count is locked at jax init), a
+    (n/2, 2)-mesh each; returns ``{str(n): record}`` for the JSON
+    ``node_sweep`` section.  Memoized per (ns, d, reps) like collect().
+    """
+    ck = ("node_sweep", tuple(ns), d, reps)
+    if ck in _CACHE:
+        return _CACHE[ck]
+    root = pathlib.Path(__file__).resolve().parent.parent
+    out = {}
+    for n in ns:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(root / "src")
+        env.pop("XLA_FLAGS", None)
+        env["BENCH_N"] = str(n)
+        env["BENCH_D"] = str(d)
+        env["BENCH_REPS"] = str(reps)
+        proc = subprocess.run([sys.executable, "-c", _NODE_INNER], env=env,
+                              capture_output=True, text=True,
+                              timeout=timeout)
+        if proc.returncode != 0:
+            raise RuntimeError(f"node_sweep subprocess (n={n}) failed:\n"
+                               f"{proc.stderr[-2000:]}")
+        out[str(n)] = json.loads(proc.stdout.strip().splitlines()[-1])
+    _CACHE[ck] = out
+    return out
+
+
+def check_node_scaling(sweep: dict) -> list:
+    """Node-sweep invariants (must be empty):
+
+    * the hierarchy's cross-host bytes equal the effective-n accounting
+      exactly and shrink by the inner-group factor vs flat, at every n;
+    * at the largest simulated n, the reduce-scatter decode beats the flat
+      gather decode wall-clock for bernoulli — the codec whose decode
+      regenerates n·d support draws when flat but only n_eff·(d/n_in) when
+      sharded, so decode FLOPs dominate and the O(n·d) → O(d) win shows up
+      even on fake single-core meshes.
+    """
+    bad = []
+    for n, rec in sweep.items():
+        for name, e in rec["codecs"].items():
+            if e["hier_cross_bytes"] != e["accounted_cross_bytes"]:
+                bad.append(f"node_sweep n={n} {name}: cross bytes "
+                           f"{e['hier_cross_bytes']:.0f} != accounted "
+                           f"{e['accounted_cross_bytes']:.0f}")
+            if e["flat_payload_bytes"] != rec["n_in"] * e["hier_cross_bytes"]:
+                bad.append(f"node_sweep n={n} {name}: flat payload "
+                           f"{e['flat_payload_bytes']:.0f} != n_in x hier "
+                           f"{rec['n_in'] * e['hier_cross_bytes']:.0f}")
+    top = max(sweep, key=int)
+    e = sweep[top]["codecs"]["bernoulli"]
+    if not e["hier_us"] < e["flat_us"]:
+        bad.append(f"node_sweep n={top} bernoulli: hier {e['hier_us']:.0f}us "
+                   f"not faster than flat {e['flat_us']:.0f}us")
+    return bad
 
 
 def check_payload_accounting(res: dict) -> list:
@@ -198,6 +345,31 @@ def rows():
     tern_pl = p["ternary_packed"]["payload_bytes"]
     rot_pl = p["rotated_binary"]["payload_bytes"]
     bad = check_payload_accounting(res)
+    t1 = time.perf_counter()
+    try:
+        sweep = collect_node_sweep()
+    except RuntimeError as e:
+        node_row = {"name": "collectives.node_sweep",
+                    "us_per_call": (time.perf_counter() - t1) * 1e6,
+                    "derived": f"FAILED: {str(e)[-300:]}", "check": False}
+    else:
+        nbad = check_node_scaling(sweep)
+        top = max(sweep, key=int)
+        e = sweep[top]["codecs"]["bernoulli"]
+        node_row = {
+            "name": "collectives.node_sweep",
+            "us_per_call": (time.perf_counter() - t1) * 1e6,
+            "derived": (f"n={top} bernoulli flat={e['flat_us']:.0f}us "
+                        f"hier={e['hier_us']:.0f}us "
+                        f"(x{e['flat_us'] / max(e['hier_us'], 1):.1f}); "
+                        f"cross B flat={e['flat_payload_bytes']:.2e} "
+                        f"hier={e['hier_cross_bytes']:.2e}"
+                        + ("; " + "; ".join(nbad) if nbad else "")),
+            # cross-host bytes == effective-n accounting at every n AND the
+            # reduce-scatter decode beats flat gather wall-clock at the
+            # largest n.
+            "check": not nbad,
+        }
     return [
         {
             "name": "collectives.wire_bytes",
@@ -230,4 +402,5 @@ def rows():
             # accounting; rotated presets cost exactly their inner codec.
             "check": not bad,
         },
+        node_row,
     ]

@@ -31,12 +31,17 @@ _ROOT = pathlib.Path(__file__).resolve().parent.parent
 if str(_ROOT) not in sys.path:
     sys.path.insert(0, str(_ROOT))
 
-SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap", "device_step"}
+SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap", "device_step",
+                   "node_sweep"}
 PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
 DEVICE_STEP_REQUIRED = {"pack_us", "decode_us", "unpack_us", "wire_us",
                         "modeled_us", "row_bytes"}
 OVERLAP_REQUIRED = {"overlap_us", "post_us", "overlap_launches",
                     "post_launches", "buckets", "schedule"}
+NODE_SWEEP_REQUIRED = {"flat_us", "hier_us", "flat_payload_bytes",
+                       "hier_cross_bytes", "accounted_cross_bytes"}
+# simulated node counts the hierarchical flat-vs-two-level sweep must cover.
+CORE_NODE_COUNTS = {"4", "8", "16"}
 # schedules that must stay in the overlap record for trajectory comparison.
 CORE_OVERLAP_PRESETS = {"none", "fixed_k_1bit", "bernoulli_seed_1bit",
                         "binary_packed", "ternary_opt", "ef_rotated_binary"}
@@ -76,6 +81,22 @@ def validate_schema(res: dict) -> list:
             bad.append(f"device_step {name}: missing {sorted(miss)}")
         elif not (e["modeled_us"] > 0 and e["wire_us"] > 0):
             bad.append(f"device_step {name}: non-positive model {e}")
+    sweep = res.get("node_sweep", {})
+    missing_ns = CORE_NODE_COUNTS - set(sweep)
+    if missing_ns:
+        bad.append(f"node_sweep: missing node counts {sorted(missing_ns)}")
+    for n, rec in sweep.items():
+        for cname in ("bernoulli", "fixed_k"):
+            e = rec.get("codecs", {}).get(cname)
+            if e is None:
+                bad.append(f"node_sweep n={n}: missing codec {cname}")
+                continue
+            miss = NODE_SWEEP_REQUIRED - set(e)
+            if miss:
+                bad.append(f"node_sweep n={n} {cname}: missing {sorted(miss)}")
+            elif not (e["hier_us"] > 0 and e["hier_cross_bytes"] > 0):
+                bad.append(f"node_sweep n={n} {cname}: "
+                           f"non-positive measurements {e}")
     missing_ov = CORE_OVERLAP_PRESETS - set(res.get("overlap", {}))
     if missing_ov:
         bad.append(f"overlap: missing presets {sorted(missing_ov)}")
@@ -118,9 +139,14 @@ def main(argv=None) -> None:
         # it is the compressed-beats-dense success metric, and the model
         # is single-device (no 8-device mesh), so it stays CI-affordable.
         res["device_step"] = bench_device_step.collect()
+        # flat-vs-hierarchical node sweep: the reduce-scatter decode must
+        # beat the flat gather decode wall-clock at the largest simulated
+        # n (kept at the full d — the decode-FLOP asymmetry IS the gate).
+        res["node_sweep"] = bench_collectives.collect_node_sweep(reps=1)
         failed = write_collectives_json(args.json, res)
         failed += bench_device_step.check_compressed_beats_dense(
             res["device_step"])
+        failed += bench_collectives.check_node_scaling(res["node_sweep"])
         if failed:
             print(f"FAILED smoke checks: {failed}", file=sys.stderr)
             sys.exit(1)
@@ -146,6 +172,7 @@ def main(argv=None) -> None:
         res = bench_collectives.collect()
         res["overlap"] = bench_bucketing.collect_overlap()
         res["device_step"] = bench_device_step.collect()
+        res["node_sweep"] = bench_collectives.collect_node_sweep()
     except RuntimeError as e:
         failed.append(f"collectives.json: {str(e)[-300:]}")
     else:

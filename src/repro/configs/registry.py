@@ -118,18 +118,46 @@ COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
         encoder=core_types.EncoderSpec(kind="binary", center="min",
                                        rotation=True),
         mode="gather_decode", axes=("pod",), error_feedback=True),
+    # Hierarchical two-level presets (docs/DESIGN.md §11): exact pmean
+    # inside the host ("data") axis, compressed codec only across the
+    # "pod" axis, reduce-scatter decode sharded over the inner group.
+    # On a single-axis mesh, compression_preset(name, axes=...) flattens
+    # these to the plain codec (colliding inner axes are dropped).
+    "hier_fixed_k": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1.0 / 16,
+                                       center="mean"),
+        mode="gather_decode", axes=("pod",), inner_axes=("data",),
+        scatter_decode=True),
+    "hier_bernoulli": core_types.CompressionConfig(
+        encoder=core_types.EncoderSpec(kind="bernoulli", fraction=1.0 / 16,
+                                       center="mean"),
+        mode="gather_decode", axes=("pod",), inner_axes=("data",),
+        scatter_decode=True),
 }
 
 
 def compression_preset(name: str,
                        axes: Tuple[str, ...] | None = None
                        ) -> core_types.CompressionConfig:
-    """Resolve a named preset, optionally re-pointing its mesh axes."""
+    """Resolve a named preset, optionally re-pointing its mesh axes.
+
+    Re-pointing onto an axis a hierarchical preset uses as an inner axis
+    flattens the hierarchy: the colliding inner axes are dropped (and
+    ``scatter_decode`` with them, when none remain), so e.g. the ``hier_*``
+    presets degrade to their plain flat codec on a single-axis mesh —
+    every all-preset enumeration (benchmarks, golden wire matrix,
+    distributed checks) keeps working unchanged.
+    """
     if name not in COMPRESSION_PRESETS:
         raise KeyError(f"unknown compression preset {name!r}; "
                        f"have {sorted(COMPRESSION_PRESETS)}")
     cfg = COMPRESSION_PRESETS[name]
-    return dataclasses.replace(cfg, axes=axes) if axes is not None else cfg
+    if axes is None:
+        return cfg
+    inner = tuple(a for a in cfg.inner_axes if a not in axes)
+    return dataclasses.replace(
+        cfg, axes=axes, inner_axes=inner,
+        scatter_decode=cfg.scatter_decode and bool(inner))
 
 
 def get_run_config(arch: str, shape: str, *, multi_pod: bool = False,

@@ -151,7 +151,7 @@ def compressed_mean(x, key, cfg: t.CompressionConfig):
     average* is what recovers the mean (docs/DESIGN.md §8).
     """
     if cfg.mode == "none" or x.size < cfg.min_compress_size:
-        return jax.lax.pmean(x, cfg.axes)
+        return jax.lax.pmean(x, tuple(cfg.inner_axes) + tuple(cfg.axes))
     return wire.resolve(cfg).mean(x, key, cfg)
 
 
@@ -166,7 +166,7 @@ def compressed_mean_stateful(x, state, key, cfg: t.CompressionConfig):
     so callers that own state need no dispatch of their own.
     """
     if cfg.mode == "none" or x.size < cfg.min_compress_size:
-        return jax.lax.pmean(x, cfg.axes), state
+        return jax.lax.pmean(x, tuple(cfg.inner_axes) + tuple(cfg.axes)), state
     codec = wire.resolve(cfg)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
@@ -181,7 +181,18 @@ def partial_mean(x, alive, axes: Axes):
 
     ``alive``: local 0/1 scalar.  Unbiased for the survivors' mean — the
     averaging decoder is n-agnostic (docs/DESIGN.md §5).
+
+    All-dead contract: when every node is masked out the survivors' mean
+    does not exist, and the result is NaN (0/0) by design.  The historical
+    ``maximum(psum(alive), 1.0)`` denominator clamp silently returned an
+    all-zero vector instead — indistinguishable from a genuine zero mean,
+    so a failure-plan bug upstream (or a fully partitioned mesh) would
+    train on fabricated zeros without any signal.  NaN poisons the step
+    loudly and is checkable (``jnp.isnan``); callers that can tolerate
+    total failure must branch on ``psum(alive) > 0`` themselves.  With at
+    least one survivor the result is bit-identical to the clamped version
+    (the clamp only engaged at den == 0).
     """
     num = jax.lax.psum(x * alive, axes)
-    den = jnp.maximum(jax.lax.psum(alive, axes), 1.0)
+    den = jax.lax.psum(alive, axes)
     return num / den

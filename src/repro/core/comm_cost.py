@@ -165,7 +165,7 @@ def cost(spec: CommSpec, *, n: int, d: int, probs=None, k=None, p=None,
     raise ValueError(spec.protocol)
 
 
-def cost_config(cfg, *, n: int, d: int) -> float:
+def cost_config(cfg, *, n: int, d: int, mesh_sizes=None) -> float:
     """Analytic cost of the wire codec the registry resolves for ``cfg``.
 
     The config-level companion of :func:`cost`: instead of hand-picking a
@@ -177,9 +177,17 @@ def cost_config(cfg, *, n: int, d: int) -> float:
     (verified per codec by tests/test_wire_registry.py):
 
         cost_config == codec.wire_bits + codec.seed_bits.
+
+    ``n`` is the flat world size over all compression axes.  Hierarchical
+    configs (``cfg.inner_axes``) pre-reduce exactly inside the inner
+    groups, so only the cross-host group's messages exist — the codec is
+    billed at :func:`repro.core.wire.effective_nodes`, which needs
+    ``mesh_sizes`` (axis name → size) to derive the split.  Flat configs
+    ignore ``mesh_sizes``.
     """
     from repro.core import wire  # local import: wire consumes this module
-    return float(wire.resolve(cfg).comm_cost_bits(n, d, cfg))
+    n_eff = wire.effective_nodes(cfg, n, mesh_sizes)
+    return float(wire.resolve(cfg).comm_cost_bits(n_eff, d, cfg))
 
 
 # --- realized cost of one encoded round ----------------------------------- #

@@ -162,11 +162,30 @@ class CompressionConfig:
     ``axes`` are the mesh axes over which the mean is estimated (e.g.
     ``("data",)`` in-pod, ``("pod",)`` for cross-DCN-only compression, or
     ``("pod", "data")``).
+
+    ``inner_axes`` select the two-level hierarchical schedule (docs/
+    DESIGN.md §11): the mean over the *inner* (fast, intra-host) axes is
+    taken exactly with one pmean before the codec runs, and the codec
+    compresses only across ``axes`` (the slow, cross-host link).  The
+    codec's effective node count is then the cross-host group size — the
+    accounting helper is :func:`repro.core.wire.effective_nodes`.
+
+    ``scatter_decode`` selects the reduce-scatter decode decomposition for
+    the linear gather codecs (fixed_k / bernoulli and their rotated/EF
+    wraps): each node decodes only its 1/m shard of the bucket (m = the
+    inner-group size) and one all_gather of decoded shards over the inner
+    axes replaces the n-message broadcast, cutting decode FLOPs and peak
+    memory from O(n·d) to O(n·d/m).  Bit-exact vs the flat decode by
+    construction (same per-coordinate arithmetic, only partitioned);
+    requires non-empty ``inner_axes`` and a codec that declares
+    ``scatter_supported`` (validated by the registry at resolve time).
     """
 
     encoder: EncoderSpec = dataclasses.field(default_factory=EncoderSpec)
     mode: str = "none"
     axes: Tuple[str, ...] = ("data",)
+    inner_axes: Tuple[str, ...] = ()
+    scatter_decode: bool = False
     error_feedback: bool = False
     wire_dtype: str = "bfloat16"
     # Gradient bucketing (repro.train.bucketing): one collective per bucket
@@ -183,6 +202,16 @@ class CompressionConfig:
             raise ValueError(f"unknown mode {self.mode!r}; want one of {MODES}")
         if self.mode == "shared_support" and self.encoder.kind not in ("fixed_k", "identity"):
             raise ValueError("shared_support mode requires the fixed_k encoder")
+        overlap = set(self.inner_axes) & set(self.axes)
+        if overlap:
+            raise ValueError(
+                f"inner_axes and axes must be disjoint; both contain "
+                f"{sorted(overlap)}")
+        if self.scatter_decode and not self.inner_axes:
+            raise ValueError(
+                "scatter_decode shards the decode over inner_axes and "
+                "needs at least one (the decoded-shard all_gather rides "
+                "the inner axes)")
 
 
 def fixed_k_from_fraction(d: int, fraction: float) -> int:

@@ -76,6 +76,40 @@ def gather_nested(v, axes: Axes):
     return out
 
 
+def effective_nodes(cfg: t.CompressionConfig, n: int,
+                    mesh_sizes=None) -> int:
+    """The codec's effective node count: the cross-host group size.
+
+    Flat configs (no ``inner_axes``) compress over all ``n`` nodes and are
+    billed for n messages.  Hierarchical configs pre-reduce exactly over
+    the inner axes, so only ``n / prod(inner sizes)`` compressed messages
+    exist per round — THE node count every accounting consumer
+    (:func:`repro.core.comm_cost.cost_config`,
+    :func:`repro.train.bucketing.bucket_wire_bits`) must charge, or
+    hierarchical presets get billed payload that never crosses the slow
+    link.  ``mesh_sizes`` maps axis name → size and is required whenever
+    ``cfg.inner_axes`` is non-empty (the flat world size alone cannot
+    determine the split).
+    """
+    if not cfg.inner_axes:
+        return int(n)
+    if mesh_sizes is None:
+        raise ValueError(
+            f"config has inner_axes={cfg.inner_axes}: accounting needs "
+            "mesh_sizes to derive the cross-host group size")
+    m = 1
+    for ax in cfg.inner_axes:
+        if ax not in mesh_sizes:
+            raise ValueError(
+                f"inner axis {ax!r} missing from mesh_sizes {mesh_sizes}")
+        m *= int(mesh_sizes[ax])
+    if m <= 0 or n % m:
+        raise ValueError(
+            f"world size {n} not divisible by inner-group size {m} "
+            f"(inner_axes={cfg.inner_axes}, mesh_sizes={mesh_sizes})")
+    return int(n) // m
+
+
 def center(x, policy: str):
     """The node center μ_i used on the wire (data-independent policies only)."""
     if policy == "zero":
@@ -100,6 +134,10 @@ class WireCodec:
     name: str = "?"
     reduce: str = "all_gather"          # "all_gather" | "psum"
     stateful: bool = False              # True iff state_shape is not None
+    # True iff the codec implements decode_gathered_shard — the linear
+    # gather decoders whose averaging decode partitions coordinate-wise
+    # (fixed_k, bernoulli, and wrappers that delegate to them).
+    scatter_supported: bool = False
 
     # ---- wire geometry & accounting -------------------------------------- #
 
@@ -153,6 +191,21 @@ class WireCodec:
         acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
         return acc / n
 
+    def decode_gathered_shard(self, rows, key, cfg: t.CompressionConfig,
+                              d: int, n: int, shard, nshards: int):
+        """One shard of the averaging decode (reduce-scatter decomposition).
+
+        Returns this node's contiguous ``⌈d/nshards⌉``-slice of what
+        :meth:`decode_gathered` would return (shard ``shard`` of
+        ``nshards``; the last shard is zero-padded past d) — so that
+        concatenating the shards in order and truncating to d reproduces
+        the flat decode bit-for-bit.  Only codecs whose decode is a
+        coordinate-wise sum over peer reconstructions can implement this
+        (``scatter_supported``).
+        """
+        raise NotImplementedError(
+            f"codec {self.name!r} does not support scatter_decode")
+
     def decode_reduced(self, wire, key, cfg: t.CompressionConfig, d: int):
         """Decode the *reduced* wire buffer of a "psum" codec.
 
@@ -181,18 +234,38 @@ class WireCodec:
         """One stateful round: returns (mean_estimate, new_state).
 
         Default: stateless codecs ignore and pass the state through, so
-        every codec is drivable through this one entry point.
+        every codec is drivable through this one entry point.  Like
+        :meth:`mean_flat`, the exact inner-axes pre-reduce of the
+        hierarchical schedule happens here, before any codec layer runs.
         """
-        return self.mean_flat(flat, key, cfg), state
+        if cfg.inner_axes:
+            flat = jax.lax.pmean(flat, cfg.inner_axes)
+        return self._round_stateful(flat, state, key, cfg)
 
     # ---- the collective --------------------------------------------------- #
 
     def mean_flat(self, flat, key, cfg: t.CompressionConfig):
-        """Estimate mean(flat) over cfg.axes; must run inside shard_map.
+        """Estimate mean(flat) over cfg.inner_axes + cfg.axes; must run
+        inside shard_map.
+
+        Two-level schedule (docs/DESIGN.md §11): the mean over the inner
+        (fast) axes is exact — one pmean before the codec — and the codec
+        round runs only across ``cfg.axes``, the slow link.  With empty
+        ``inner_axes`` this is the historical flat round, op-for-op.
+        """
+        if cfg.inner_axes:
+            flat = jax.lax.pmean(flat, cfg.inner_axes)
+        return self._round(flat, key, cfg)
+
+    def _round(self, flat, key, cfg: t.CompressionConfig):
+        """One codec round across cfg.axes (input already inner-reduced).
 
         Gather codecs run the star protocol (§2/§4.4) — one all_gather of
         the packed buffer per call, decode locally.  "psum" codecs pmean
-        the packed buffer and decode the reduced wire.
+        the packed buffer and decode the reduced wire.  Wrapper codecs
+        (rotation, error feedback) override THIS hook, not the public
+        entry points, so the inner-axes pre-reduce happens exactly once at
+        the outermost layer.
         """
         d = flat.shape[0]
         rank, n = axis_rank_size(cfg.axes)
@@ -200,7 +273,30 @@ class WireCodec:
         if self.reduce == "psum":
             wire = jax.lax.pmean(buf, cfg.axes)
             return self.decode_reduced(wire, key, cfg, d)
+        return self.gather_decode(buf, key, cfg, d, n)
+
+    def _round_stateful(self, flat, state, key, cfg: t.CompressionConfig):
+        """Stateful companion of :meth:`_round` (input inner-reduced)."""
+        return self._round(flat, key, cfg), state
+
+    def gather_decode(self, buf, key, cfg: t.CompressionConfig,
+                      d: int, n: int):
+        """all_gather the packed buffer over cfg.axes and decode.
+
+        With ``cfg.scatter_decode`` the decode is reduce-scattered over
+        the inner axes: each node decodes only its contiguous 1/m shard
+        (m = the inner-group size) and one all_gather of decoded shards —
+        riding the fast inner link — reassembles the estimate.  Shards
+        concatenate in inner-rank order and pads sit past d, so the result
+        equals the flat decode bit-for-bit.
+        """
         rows = gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
+        if cfg.scatter_decode:
+            shard, nshards = axis_rank_size(cfg.inner_axes)
+            part = self.decode_gathered_shard(rows, key, cfg, d, n,
+                                              shard, nshards)
+            full = gather_nested(part, cfg.inner_axes).reshape(-1)
+            return full[:d]
         return self.decode_gathered(rows, key, cfg, d, n)
 
     def mean(self, x, key, cfg: t.CompressionConfig):

@@ -94,6 +94,7 @@ class FixedKGatherCodec(base.WireCodec):
     """
 
     name = "fixed_k"
+    scatter_supported = True
 
     def wire_slots(self, d, cfg):
         return fixed_k_wire_slots(d, cfg.encoder.fraction)
@@ -136,6 +137,30 @@ class FixedKGatherCodec(base.WireCodec):
         acc = jax.lax.fori_loop(0, n, body,
                                 jnp.zeros((nb, fk.BLOCK), jnp.float32))
         return (acc / n + jnp.mean(all_mu)).reshape(-1)[:d]
+
+    def decode_gathered_shard(self, rows, key, cfg, d, n, shard, nshards):
+        # reduce-scatter decomposition: accumulate only the blocks in this
+        # node's contiguous ⌈nb/nshards⌉-block window.  Out-of-window ids
+        # land in a dump row that is sliced off, so every in-window block
+        # receives exactly the flat decode's adds in the same peer order —
+        # the concatenated shards equal decode_gathered bit-for-bit.
+        rows = rows.astype(jnp.float32)
+        nb = fk.num_blocks(d)
+        kb = fixed_k_blocks(d, cfg.encoder.fraction)
+        nb_s = -(-nb // nshards)
+        all_vals = rows[:, :-1].reshape(n, kb, fk.BLOCK)
+        all_mu = rows[:, -1]
+        lo = shard * nb_s
+
+        def body(i, acc):
+            ids_i = fk.sample_blocks(jax.random.fold_in(key, i), nb, kb)
+            loc = ids_i - lo
+            loc = jnp.where((loc >= 0) & (loc < nb_s), loc, nb_s)
+            return acc.at[loc].add(all_vals[i])
+
+        acc = jax.lax.fori_loop(0, n, body,
+                                jnp.zeros((nb_s + 1, fk.BLOCK), jnp.float32))
+        return (acc[:nb_s] / n + jnp.mean(all_mu)).reshape(-1)
 
 
 class FixedKSharedCodec(base.WireCodec):
@@ -257,6 +282,7 @@ class BernoulliCodec(base.WireCodec):
     """
 
     name = "bernoulli"
+    scatter_supported = True
 
     def wire_slots(self, d, cfg):
         return bernoulli_wire_slots(d, cfg.encoder.fraction)
@@ -293,6 +319,31 @@ class BernoulliCodec(base.WireCodec):
         keys = jnp.stack([jax.random.fold_in(key, i) for i in range(n)])
         total = bw_ops.decode_sum(rows[:, :-1], rows[:, -1], keys,
                                   p, cap, d)
+        return total / n
+
+    def decode_gathered_shard(self, rows, key, cfg, d, n, shard, nshards):
+        # reduce-scatter decomposition.  Support ranks are global (a sent
+        # coordinate's value slot is its rank in the FULL support), so each
+        # shard needs every peer's support count strictly before its
+        # window: per-shard counts are all_gathered over the inner (fast)
+        # axes and exclusive-cumsummed — the single cross-host collective
+        # stays the wire-buffer all_gather in base.gather_decode.  Shard
+        # supports regenerate via scattered Threefry lanes
+        # (threefry.ref.uniform_at): only d/nshards draws per peer instead
+        # of d, which is where the O(n·d) → O(n·d/m) decode win comes from.
+        p = float(cfg.encoder.fraction)
+        cap = comm_cost.bernoulli_capacity(d, p)
+        rows = rows.astype(jnp.float32)
+        keys = jnp.stack([jax.random.fold_in(key, i) for i in range(n)])
+        ds = -(-d // nshards)
+        start = shard * ds
+        sent = bw_ops.support_shard(keys, p, d, start, ds)
+        counts = jnp.sum(sent.astype(jnp.int32), axis=1)
+        allc = base.gather_nested(counts, cfg.inner_axes).reshape(nshards, n)
+        prior = jnp.cumsum(allc, axis=0) - allc
+        prior_here = jnp.take(prior, shard, axis=0)
+        total = bw_ops.decode_sum_shard(rows[:, :-1], rows[:, -1], sent,
+                                        prior_here, cap)
         return total / n
 
 

@@ -227,6 +227,7 @@ class EFCodec(base.WireCodec):
         self.inner = inner
         self.name = "ef_" + inner.name
         self.reduce = inner.reduce
+        self.scatter_supported = inner.scatter_supported
 
     # ---- geometry & accounting: delegated verbatim ------------------------ #
     # The residual never touches the wire, so the payload IS the inner
@@ -263,6 +264,10 @@ class EFCodec(base.WireCodec):
     def decode_gathered(self, rows, key, cfg, d, n):
         return self.inner.decode_gathered(rows, key, cfg, d, n)
 
+    def decode_gathered_shard(self, rows, key, cfg, d, n, shard, nshards):
+        return self.inner.decode_gathered_shard(rows, key, cfg, d, n,
+                                                shard, nshards)
+
     def decode_reduced(self, wire, key, cfg, d):
         return self.inner.decode_reduced(wire, key, cfg, d)
 
@@ -278,12 +283,15 @@ class EFCodec(base.WireCodec):
         """
         return _twin_bound(self.inner, flat, key, cfg)
 
-    def mean_flat_stateful(self, flat, state, key, cfg):
+    def _round_stateful(self, flat, state, key, cfg):
         """One EF round: (estimate, new_residual); must run in shard_map.
 
         The new residual is v minus the inner codec's ``unpack`` of the
         bytes this node actually shipped, so wire-dtype rounding and
         capacity-overflow drops are recycled too, not just sparsification.
+        Under the hierarchical schedule ``flat`` arrives already
+        inner-reduced (base.mean_flat*), so the residual tracks the
+        cross-host message — the only lossy step.
         """
         d = flat.shape[0]
         rank, n = base.axis_rank_size(cfg.axes)
@@ -293,17 +301,16 @@ class EFCodec(base.WireCodec):
             wire = jax.lax.pmean(buf, cfg.axes)
             est = self.inner.decode_reduced(wire, key, cfg, d)
         else:
-            rows = base.gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
-            est = self.inner.decode_gathered(rows, key, cfg, d, n)
+            est = self.gather_decode(buf, key, cfg, d, n)
         recon = self.inner.unpack(buf, rank, key, cfg, d)
         return est, v - recon
 
-    def mean_flat(self, flat, key, cfg):
-        """Stateless entry point: one zero-residual round, state discarded.
+    def _round(self, flat, key, cfg):
+        """Stateless round: zero residual, state discarded.
 
         Keeps EF configs usable by payload/HLO measurements and benchmarks
         that lower ``compressed_mean``; training threads real residuals via
         ``compressed_mean_stateful``.
         """
-        y, _ = self.mean_flat_stateful(flat, jnp.zeros_like(flat), key, cfg)
+        y, _ = self._round_stateful(flat, jnp.zeros_like(flat), key, cfg)
         return y

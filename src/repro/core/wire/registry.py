@@ -128,4 +128,9 @@ def resolve(cfg: t.CompressionConfig) -> base.WireCodec:
     if cfg.error_feedback:
         name = "ef_" + codec.name
         codec = _CODECS.get(name) or ef.EFCodec(codec)
+    if cfg.scatter_decode and not codec.scatter_supported:
+        raise ValueError(
+            f"scatter_decode requires a linear gather decode; codec "
+            f"{codec.name!r} does not partition coordinate-wise "
+            "(scatter_supported=False)")
     return codec

@@ -48,6 +48,9 @@ class RotatedCodec(base.WireCodec):
         # codec state (e.g. a wrapped EFCodec's residual) is forwarded, so
         # rotation∘EF compositions thread their state through the rotation.
         self.stateful = inner.stateful
+        # the rotated decode partitions iff the inner one does (the
+        # unrotate happens on the reassembled estimate, outside the shards).
+        self.scatter_supported = inner.scatter_supported
 
     # ---- geometry & accounting: the inner codec at padded_dim(d) ---------- #
 
@@ -106,19 +109,24 @@ class RotatedCodec(base.WireCodec):
     def state_shape(self, d, cfg):
         return self.inner.state_shape(rotation.padded_dim(d), cfg)
 
-    def mean_flat_stateful(self, flat, state, key, cfg):
+    def _round_stateful(self, flat, state, key, cfg):
         # The state lives in the (per-step-reseeded) rotated basis — see
         # docs/DESIGN.md §8 for why EF∘rotation (EF outermost, as built by
-        # registry.resolve) is the production order.
+        # registry.resolve) is the production order.  Overriding the
+        # _round hooks (not mean_flat*) keeps the hierarchical inner-axes
+        # pre-reduce at the one public entry point; delegating to the
+        # inner codec's _round at the padded length dp means the
+        # scatter-decode decomposition, when on, shards the ROTATED
+        # estimate and reassembles all dp coordinates before unrotating.
         d = flat.shape[0]
         krot = rotation.rotation_key(key)
         z = rotation.rotate(krot, flat)
-        zbar, new_state = self.inner.mean_flat_stateful(z, state, key, cfg)
+        zbar, new_state = self.inner._round_stateful(z, state, key, cfg)
         return rotation.unrotate(krot, zbar, d), new_state
 
-    def mean_flat(self, flat, key, cfg):
+    def _round(self, flat, key, cfg):
         d = flat.shape[0]
         krot = rotation.rotation_key(key)
         z = rotation.rotate(krot, flat)
-        zbar = self.inner.mean_flat(z, key, cfg)
+        zbar = self.inner._round(z, key, cfg)
         return rotation.unrotate(krot, zbar, d)

@@ -18,8 +18,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro import compat
 from repro.core.collectives import partial_mean  # noqa: F401  (re-export)
+from repro.core.wire import base as wire_base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,24 +29,27 @@ class FailurePlan:
     rate: float = 0.0
     seed: int = 0
 
-    def alive_mask(self, step: int, n: int) -> jax.Array:
+    def _draw(self, step: int, n: int) -> jax.Array:
+        """THE survivor rule: one (n,) boolean draw both views derive from.
+
+        ``alive_mask`` (host view) and ``local_alive`` (in-shard view) used
+        to duplicate this draw in two hand-kept copies — they now agree by
+        construction (property-tested across steps and rates by
+        tests/distributed_checks/fault_tolerance_check.py).
+        """
         key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
         u = jax.random.uniform(key, (n,))
         alive = u >= self.rate
         # never kill everyone: node argmax(u) always survives
         return alive.at[jnp.argmax(u)].set(True)
 
+    def alive_mask(self, step: int, n: int) -> jax.Array:
+        return self._draw(step, n)
+
     def local_alive(self, step: int, axes) -> jax.Array:
         """Per-shard 0/1 scalar, callable inside shard_map."""
-        rank = jnp.zeros((), jnp.int32)
-        n = 1
-        for ax in axes:
-            rank = rank * compat.axis_size(ax) + jax.lax.axis_index(ax)
-            n *= compat.axis_size(ax)
-        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
-        u = jax.random.uniform(key, (n,))
-        alive = (u >= self.rate).at[jnp.argmax(u)].set(True)
-        return alive[rank].astype(jnp.float32)
+        rank, n = wire_base.axis_rank_size(axes)
+        return self._draw(step, n)[rank].astype(jnp.float32)
 
 
 def robust_mean(x, step: int, axes, plan: FailurePlan):

@@ -41,3 +41,20 @@ def decode_sum(bufs, mus, keys, p: float, cap: int, d: int, *,
         return kernel.decode_sum_pallas(bufs, mus, keys, p=p, cap=cap,
                                         d=d, interpret=interpret)
     return ref.decode_sum(bufs, mus, keys, p, cap, d)
+
+
+def support_shard(keys, p: float, d: int, start, ds: int):
+    """(n, ds) slice [start, start+ds) of every peer's support draw.
+
+    The reduce-scatter decode's per-shard support regeneration (scattered
+    Threefry lanes only, repro.kernels.threefry.ref.uniform_at).  jnp-only
+    for now on every backend — a fused Pallas shard kernel would inline
+    the same counter math (repro.kernels.bernoulli_wire.kernel's decode
+    already does, over the full range).
+    """
+    return ref.support_shard(keys, p, d, start, ds)
+
+
+def decode_sum_shard(bufs, mus, sent, prior, cap: int):
+    """Shard-restricted Σ_i reconstruction_i; see ref.decode_sum_shard."""
+    return ref.decode_sum_shard(bufs, mus, sent, prior, cap)

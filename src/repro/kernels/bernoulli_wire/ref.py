@@ -29,6 +29,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.threefry import ref as tf_ref
+
 
 def rank_select(values, sent, cap: int):
     """(cap,) f32 with values[j] of each sent coordinate at its support
@@ -90,6 +92,40 @@ def decode_sum(bufs, mus, keys, p: float, cap: int, d: int):
         lambda k: jax.random.uniform(k, (d,), dtype=jnp.float32))(keys)
     sent = u < p
     pos = jnp.cumsum(sent.astype(jnp.int32), axis=1) - 1
+    valid = sent & (pos < cap)
+    vals = jnp.take_along_axis(bufs, jnp.clip(pos, 0, cap - 1), axis=1)
+    recon = jnp.where(valid, vals, mus[:, None])
+    return jnp.sum(recon, axis=0)
+
+
+def support_shard(keys, p: float, d: int, start, ds: int):
+    """(n, ds) support slice [start, start+ds) of every peer's (d,) draw.
+
+    ``start`` may be traced (the shard offset inside shard_map); lanes past
+    d are padding and come back False — the reduce-scatter decode's shards
+    therefore concatenate to exactly the full supports.  Draws go through
+    :func:`repro.kernels.threefry.ref.uniform_at`, bit-exact vs the
+    ``jax.random.uniform(key, (d,)) < p`` rule peers encode with.
+    """
+    idx = start + jnp.arange(ds, dtype=jnp.int32)
+    real = idx < d
+    idxc = jnp.where(real, idx, 0)
+    u = jax.vmap(lambda k: tf_ref.uniform_at(k, idxc, d))(keys)
+    return (u < p) & real[None, :]
+
+
+def decode_sum_shard(bufs, mus, sent, prior, cap: int):
+    """Σ_i reconstruction_i restricted to one coordinate shard.
+
+    ``sent``: (n, ds) support slice (from :func:`support_shard`);
+    ``prior``: (n,) support counts of each peer strictly before the shard
+    (the rank offset — a per-peer exclusive cumsum of per-shard counts,
+    computed by the caller).  Same per-coordinate arithmetic as
+    :func:`decode_sum`: rank = prior + within-shard cumsum − 1, ranks ≥
+    cap fall back to μ.  Padding lanes (sent False) also decode to μ and
+    must be truncated by the caller.
+    """
+    pos = prior[:, None] + jnp.cumsum(sent.astype(jnp.int32), axis=1) - 1
     valid = sent & (pos < cap)
     vals = jnp.take_along_axis(bufs, jnp.clip(pos, 0, cap - 1), axis=1)
     recon = jnp.where(valid, vals, mus[:, None])

@@ -96,3 +96,18 @@ def bits_to_uniform(bits):
 def uniform(key, d: int):
     """Bit-exact ``jax.random.uniform(key, (d,), jnp.float32)``."""
     return bits_to_uniform(random_bits(key, d))
+
+
+def uniform_at(key, idx, d: int):
+    """``jax.random.uniform(key, (d,), f32)[idx]`` without the (d,) draw.
+
+    ``idx``: any int array of coordinate indices < d.  Evaluates only the
+    cipher pairs feeding those lanes via :func:`counter_words` — the
+    scattered-coordinate primitive the reduce-scatter decode shard uses to
+    regenerate just its own slice of every peer's support.  Bit-exact vs
+    the full draw (tests/test_threefry_ref.py).
+    """
+    key = jnp.asarray(key).reshape(2).astype(jnp.uint32)
+    c0, c1, lo = counter_words(idx, d)
+    o0, o1 = threefry2x32(key[0], key[1], c0, c1)
+    return bits_to_uniform(jnp.where(lo, o0, o1))

@@ -280,7 +280,8 @@ def unpack_bucket(vec: jax.Array, bucket: Bucket,
 # --------------------------------------------------------------------------- #
 
 def bucket_wire_bits(plan: BucketPlan, cfg: t.CompressionConfig,
-                     n: int) -> Dict[str, float]:
+                     n: int, mesh_sizes: Optional[Mapping[str, int]] = None
+                     ) -> Dict[str, float]:
     """Gathered wire bits per compressed bucket and round, keyed by bid.
 
     Star-protocol payload convention (the one the paper's C sums and the
@@ -295,11 +296,17 @@ def bucket_wire_bits(plan: BucketPlan, cfg: t.CompressionConfig,
     compositions the inner codec's payload at the rotated length;
     error-feedback wraps delegate to their inner codec — residuals are
     local, so EF costs exactly what the wrapped codec costs).
+
+    ``n`` is the flat world size over the compression axes; hierarchical
+    configs (``cfg.inner_axes``) are billed at the cross-host group size
+    (:func:`repro.core.wire.effective_nodes`), which requires
+    ``mesh_sizes`` — only the messages that cross the slow link exist.
     """
     if cfg.mode != "gather_decode":
         return {}
+    n_eff = wire.effective_nodes(cfg, n, mesh_sizes)
     codec = wire.resolve(cfg)
-    return {b.bid: float(codec.wire_bits(n, b.size, cfg))
+    return {b.bid: float(codec.wire_bits(n_eff, b.size, cfg))
             for b in plan.buckets if b.kind == "compressed"}
 
 
@@ -321,7 +328,7 @@ def ef_state_shapes(plan: BucketPlan,
     for b in plan.buckets:
         if b.kind != "compressed":
             continue
-        lcfg = dataclasses.replace(cfg, axes=b.caxes, error_feedback=True)
+        lcfg = _bucket_cfg(b, cfg, error_feedback=True)
         shp = wire.resolve(lcfg).state_shape(b.size, lcfg)
         if shp is not None:
             out[b.bid] = shp
@@ -338,6 +345,20 @@ def init_ef_state(plan: BucketPlan,
             for bid, shp in ef_state_shapes(plan, cfg).items()}
 
 
+def _bucket_cfg(b: Bucket, cmp: t.CompressionConfig, *,
+                error_feedback: bool) -> t.CompressionConfig:
+    """The per-bucket codec config: compression axes narrowed to the
+    bucket's caxes and the hierarchical inner axes narrowed to the ones
+    the bucket actually syncs over (its eaxes) — a leaf already sharded
+    over an inner axis has no inner group to pre-reduce, and
+    scatter_decode degrades with it (nothing to scatter over)."""
+    inner = tuple(a for a in b.eaxes if a in cmp.inner_axes)
+    return dataclasses.replace(
+        cmp, axes=b.caxes, inner_axes=inner,
+        scatter_decode=cmp.scatter_decode and bool(inner),
+        error_feedback=error_feedback)
+
+
 def _bucket_round(grads: Mapping[str, jax.Array], b: Bucket, j: int,
                   cmp: t.CompressionConfig, key, ef):
     """ONE bucket's sync: pack → (pmean / codec round) → unpack.
@@ -349,18 +370,24 @@ def _bucket_round(grads: Mapping[str, jax.Array], b: Bucket, j: int,
     never its readiness), hence bit-identical estimates.  ``ef`` is the
     bucket's residual (engages the stateful EF-wrapped codec) or None.
     Returns (synced leaf dict, new residual or None).
+
+    Hierarchical configs: the bucket's exact axes that are codec inner
+    axes ride the codec round (the codec pre-reduces them and, with
+    scatter_decode, all_gathers decoded shards over them); only the
+    remaining exact axes get the standalone pmean here.  Flat configs take
+    the historical path op-for-op.
     """
     v = pack_bucket(grads, b)
     if b.kind == "exact":
         return unpack_bucket(jax.lax.pmean(v, b.eaxes), b, grads), ef
-    if b.eaxes:
-        v = jax.lax.pmean(v, b.eaxes)
+    lcfg = _bucket_cfg(b, cmp, error_feedback=ef is not None)
+    pre = tuple(a for a in b.eaxes if a not in lcfg.inner_axes)
+    if pre:
+        v = jax.lax.pmean(v, pre)
     kb = jax.random.fold_in(key, j)
     if ef is not None:
-        lcfg = dataclasses.replace(cmp, axes=b.caxes, error_feedback=True)
         v, e = coll.compressed_mean_stateful(v, ef, kb, lcfg)
         return unpack_bucket(v, b, grads), e
-    lcfg = dataclasses.replace(cmp, axes=b.caxes, error_feedback=False)
     v = coll.compressed_mean(v, kb, lcfg)
     return unpack_bucket(v, b, grads), None
 

@@ -1,5 +1,7 @@
 """Straggler/failure-path check on 8 fake devices: robust_mean equals the
-live-subset mean; a full training step survives a simulated dead node."""
+live-subset mean; the host-side and in-shard failure views agree at every
+(step, rate) because they derive from one shared draw; the all-dead
+partial_mean is NaN by contract, never a silent zero."""
 import os
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -12,7 +14,8 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
-from repro.distributed.fault_tolerance import FailurePlan, robust_mean  # noqa: E402
+from repro.distributed.fault_tolerance import (FailurePlan, partial_mean,  # noqa: E402
+                                               robust_mean)
 
 mesh = jax.make_mesh((8,), ("data",))
 N, D = 8, 1024
@@ -32,4 +35,37 @@ want = np.asarray(XS)[alive].mean(axis=0)
 assert alive.sum() < N, "plan should kill someone at rate 0.3"
 np.testing.assert_allclose(got, want, atol=1e-5)
 print(f"[ok] robust_mean over {int(alive.sum())}/{N} live nodes")
+
+# alive_mask (host view) and local_alive (in-shard view) derive from ONE
+# shared draw — the gathered per-shard scalars equal the host mask at
+# every step and rate, including the 0.0 / 1.0 edges.
+for rate in (0.0, 0.3, 0.7, 1.0):
+    p = FailurePlan(rate=rate, seed=11)
+    for step in range(5):
+
+        @functools.partial(compat.shard_map, mesh=mesh,
+                           in_specs=(P("data"),), out_specs=P("data"),
+                           check_vma=False)
+        def view(xs):
+            del xs
+            return p.local_alive(step, ("data",)).reshape(1)
+
+        got = np.asarray(jax.jit(view)(XS))
+        want = np.asarray(p.alive_mask(step, N)).astype(np.float32)
+        assert np.array_equal(got, want), (rate, step, got, want)
+        if rate == 1.0:
+            assert want.sum() == 1, want  # the one-survivor rule
+print("[ok] local_alive == alive_mask across steps x rates (one draw)")
+
+
+# all-dead partial_mean is NaN by contract (0/0): an impossible state under
+# FailurePlan's survivor rule must poison the step, not silently zero it.
+@functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"),),
+                   out_specs=P(), check_vma=False)
+def all_dead(xs):
+    return partial_mean(xs.reshape(D), jnp.float32(0.0), ("data",))
+
+
+assert np.isnan(np.asarray(jax.jit(all_dead)(XS))).all()
+print("[ok] all-dead partial_mean is NaN by contract")
 print("FAULT TOLERANCE CHECK PASSED")

@@ -1,10 +1,19 @@
-"""Straggler mitigation / failure-drop path (subprocess, 8 fake devices)."""
+"""Straggler mitigation / failure-drop path (subprocess, 8 fake devices)
+plus meshless units for the FailurePlan draw and partial_mean's contract."""
+import functools
 import os
 import pathlib
 import subprocess
 import sys
 
+import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.distributed.fault_tolerance import FailurePlan, partial_mean
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -20,3 +29,52 @@ def test_fault_tolerance():
         env=env, capture_output=True, text=True, timeout=600)
     assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
     assert "FAULT TOLERANCE CHECK PASSED" in res.stdout
+
+
+def test_failure_plan_edge_rates():
+    # rate 0.0: everyone lives; rate 1.0: exactly the one argmax survivor.
+    for step in range(10):
+        assert np.asarray(FailurePlan(rate=0.0, seed=3)
+                          .alive_mask(step, 8)).all()
+        assert np.asarray(FailurePlan(rate=1.0, seed=3)
+                          .alive_mask(step, 8)).sum() == 1
+
+
+def test_failure_plan_views_share_one_draw():
+    # local_alive indexes the SAME draw alive_mask returns — meshless
+    # equivalence via the rank the (trivial) 1-device axis reports.
+    plan = FailurePlan(rate=0.5, seed=9)
+    mesh = jax.make_mesh((1,), ("data",))
+    for step in range(6):
+
+        @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P(),),
+                           out_specs=P(), check_vma=False)
+        def local(x):
+            del x
+            return plan.local_alive(step, ("data",))
+
+        want = float(np.asarray(plan.alive_mask(step, 1))[0])
+        assert float(jax.jit(local)(jnp.zeros(()))) == want
+
+
+def _pmean_1dev(x, alive):
+    mesh = jax.make_mesh((1,), ("data",))
+
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P(None), P()),
+                       out_specs=P(), check_vma=False)
+    def f(x, alive):
+        return partial_mean(x * alive, alive, ("data",))
+
+    return np.asarray(jax.jit(f)(x, alive))
+
+
+def test_partial_mean_all_dead_is_nan():
+    # 0/0 by contract: no clamp, no silent all-zero step.
+    out = _pmean_1dev(jnp.ones((4,), jnp.float32), jnp.float32(0.0))
+    assert np.isnan(out).all()
+
+
+def test_partial_mean_single_survivor_is_exact():
+    x = jnp.asarray([1.5, -2.0, 0.25, 3.0], jnp.float32)
+    out = _pmean_1dev(x, jnp.float32(1.0))
+    assert np.array_equal(out, np.asarray(x))

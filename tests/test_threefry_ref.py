@@ -66,6 +66,20 @@ def test_counter_words_match_flat_layout(seed, d):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(flat[idx]))
 
 
+@pytest.mark.parametrize("seed", SEEDS[:3])
+@pytest.mark.parametrize("d", (1, 31, 32, 33, 1000))
+def test_uniform_at_random_access_bit_exact(seed, d):
+    """uniform_at(key, idx, d) — the random-access draw the reduce-scatter
+    Bernoulli decode regenerates shard supports from (DESIGN.md §11) —
+    must equal the flat (d,) uniform at those indices, bit for bit."""
+    key = jax.random.PRNGKey(seed)
+    flat = jax.random.uniform(key, (d,), jnp.float32)
+    idx = jnp.asarray(
+        np.random.default_rng(seed).permutation(d).astype(np.int32))
+    got = tref.uniform_at(key, idx, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(flat)[idx])
+
+
 def test_bits_to_uniform_edge_values():
     """All-ones bits stay < 1; all-zero bits clamp at exactly 0."""
     u = tref.bits_to_uniform(jnp.array([0, 0xFFFFFFFF, 1 << 9], jnp.uint32))

@@ -134,6 +134,36 @@ def test_wire_bits_plus_seed_is_comm_cost(name, wire_dtype, d):
     assert comm_cost.cost_config(cfg, n=N, d=d) == got
 
 
+def test_hierarchical_cost_is_billed_at_effective_nodes():
+    """The flat-world-size accounting bugfix: a hierarchical config charges
+    the codec at the cross-host group size — one helper
+    (wire.effective_nodes) feeds cost_config and bucket_wire_bits, so the
+    identity holds at n_eff, not at the flat n."""
+    msz = {"pod": 4, "data": 2}
+    for kind in ("fixed_k", "bernoulli"):
+        cfg = dataclasses.replace(
+            CODEC_CFGS[kind], axes=("pod",), inner_axes=("data",),
+            scatter_decode=True)
+        codec = wire.resolve(cfg)
+        assert wire.effective_nodes(cfg, N, msz) == 4
+        got = comm_cost.cost_config(cfg, n=N, d=D, mesh_sizes=msz)
+        assert got == codec.wire_bits(4, D, cfg) + codec.seed_bits(4, cfg)
+        # exactly half the flat bill at the same world size (both linear
+        # in n), and the scatter decode never changes what's on the wire.
+        flat = dataclasses.replace(cfg, inner_axes=(), scatter_decode=False)
+        assert 2 * got == comm_cost.cost_config(flat, n=N, d=D)
+
+
+def test_hier_presets_resolve_and_flatten():
+    for name in ("hier_fixed_k", "hier_bernoulli"):
+        cfg = cfg_registry.compression_preset(name)
+        assert cfg.inner_axes == ("data",) and cfg.scatter_decode
+        assert wire.resolve(cfg).scatter_supported
+        # re-pointing onto the inner axis flattens to the plain codec
+        flat = cfg_registry.compression_preset(name, axes=("data",))
+        assert flat.inner_axes == () and not flat.scatter_decode
+
+
 def test_rotated_wire_bits_are_inner_at_padded_dim():
     for name in ("rotated_binary", "rotated_fixed_k"):
         codec = wire.get(name)

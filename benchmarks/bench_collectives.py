@@ -13,7 +13,9 @@ simulation).  Two byte conventions are reported per preset:
 * ``payload_bytes`` — the star-protocol payload Σ_i |message_i| that the
   paper's C sums charge (all-gather: the gathered result size; all-reduce:
   n × the reduced buffer).  Every preset's payload must equal the resolved
-  codec's ``wire_bits`` accounting exactly, binary must undercut the dense
+  codec's ``wire_bits + scatter_bits`` accounting exactly (scatter_bits is
+  nonzero only for the §12 flat-scatter presets: the i32 rank-offset counts
+  plus the decoded f32 shard gather), binary must undercut the dense
   f32 simulation ≥ 8× (it lands at ~32×), the §7.2 rotated presets must
   cost exactly their un-rotated codec's payload (seed-only overhead), and
   the error-feedback presets must cost exactly their EF-free codec's
@@ -87,10 +89,10 @@ for name, cfg in preset_cfgs().items():
     # TPU-normalization heuristics of DESIGN.md §6 (large f32 gathers are
     # assumed to be CPU-legalized bf16 and charged half), which would
     # misprice this sweep's genuine f32 wire buffers.
-    nbytes = {"f32": 4, "u32": 4, "bf16": 2}
+    nbytes = {"f32": 4, "u32": 4, "s32": 4, "bf16": 2}
     payload = 0.0
     for dt, dims, op in re.findall(
-            r"= (f32|u32|bf16)\[([\d,]+)\]\S* (all-gather|all-reduce)"
+            r"= (f32|u32|s32|bf16)\[([\d,]+)\]\S* (all-gather|all-reduce)"
             r"(?:-start)?\(", txt):
         b = nbytes[dt]
         for x in dims.split(","):
@@ -114,7 +116,11 @@ for name, cfg in preset_cfgs().items():
     if cfg.mode != "none":
         codec = wire.resolve(cfg)
         entry["codec"] = codec.name
-        entry["accounted_payload_bytes"] = codec.wire_bits(N, D, cfg) / 8
+        # flat-scatter presets (§12) ship two extra collectives — the
+        # i32 rank-offset counts and the decoded f32 shard gather —
+        # billed by scatter_bits; hier/non-scatter presets add 0.
+        entry["accounted_payload_bytes"] = (
+            codec.wire_bits(N, D, cfg) + codec.scatter_bits(N, D, cfg)) / 8
     res["presets"][name] = entry
 print(json.dumps(res))
 """

@@ -8,17 +8,40 @@ one device's step instead:
 
     modeled_us = pack_us + decode_us (+ unpack_us for stateful EF codecs,
                  their residual reconstruction) + wire_us
+                 (+ shard_gather_us for §12 flat-scatter presets)
 
 * ``pack_us``/``decode_us``/``unpack_us`` — measured, jitted, single
   device, on the SAME codec entry points the production collective calls
   (pack → decode_gathered / decode_reduced), at the production wire dtype.
-  Timing discipline: 2 warm-up calls (compile + allocator settle), REPS
-  timed calls, block_until_ready at the end — identical to the other bench
-  sections so µs are comparable across the JSON record.
+  Presets with no unpack stage report ``unpack_us: null`` — only stateful
+  EF codecs reconstruct their own contribution, everything else has no
+  such stage and gets no fake 0.0 measurement.  Timing discipline: 2
+  warm-up calls (compile + allocator settle), REPS timed calls,
+  block_until_ready at the end — identical to the other bench sections so
+  µs are comparable across the JSON record.
+* flat-scatter presets (``cfg.scatter_decode`` on the main axes, §12)
+  decode only their own ⌈d/n⌉-coordinate shard per device; their
+  ``decode_us`` is the measured per-shard work, broken down in
+  ``decode_stages`` as ``regenerate_us`` (scattered Threefry support
+  draws, kernels.bernoulli_wire.ops.support_shard) + ``accumulate_us``
+  (select+accumulate over all n peer rows, decode_sum_shard), plus the
+  modeled ``shard_gather_us`` of the two extra collectives the scatter
+  path ships (i32 rank-offset counts + the decoded f32 shard gather,
+  exactly the codec's ``scatter_bits``) at ``BENCH_MESH_MBPS`` (default
+  10 Gbit/s — the shard gather rides the fast intra-mesh fabric, not the
+  thin cross-host link the wire model charges).  Non-scatter presets
+  report ``decode_stages: null``.
 * ``wire_us`` — a ring-collective model over the measured buffer bytes:
   all-gather moves n·b·(s−1)/s, all-reduce 2·b·(s−1)/s (hlo_cost's
   roofline convention) at ``BENCH_LINK_MBPS`` (default 100 Mbit/s — a
   deliberately thin DCN-class link; the paper's regime is wire-bound).
+
+``collect`` also emits a ``decode_n_sweep`` section for the Bernoulli
+seed codec: full O(n·d) decode vs the per-shard O(d) scatter decode
+across n ∈ {2,4,8,16} at a fixed d, so the decode-scaling claim of the
+flat-scatter work is visible in the JSON trajectory, and
+:func:`check_decode_scaling` gates `bernoulli_seed_1bit` decode_us
+against the committed BENCH_collectives.json baseline.
 
 Gate (enforced by benchmarks/run.py --smoke AND the full run): every
 compressed preset's modeled step beats the dense-f32 baselines ("none"
@@ -39,10 +62,16 @@ N = 8
 D_DEFAULT = 1 << 20
 REPS = 3
 DENSE_BASELINES = ("none", "binary_dense")
+SWEEP_D = 1 << 18
+SWEEP_NS = (2, 4, 8, 16)
 
 
 def _link_mbps() -> float:
     return float(os.environ.get("BENCH_LINK_MBPS", 100.0))
+
+
+def _mesh_mbps() -> float:
+    return float(os.environ.get("BENCH_MESH_MBPS", 10_000.0))
 
 
 def _time(fn, *args) -> float:
@@ -78,24 +107,51 @@ def _preset_cfgs():
     return out
 
 
+def _bernoulli_shard_stage_us(rows, key, p: float, cap: int, d: int,
+                              n: int):
+    """(regenerate_us, accumulate_us) of one node's ⌈d/n⌉ shard decode.
+
+    Times the two per-device compute stages of the §12 scatter decode on
+    the same kernel entry points the codec dispatches to.  The rank-offset
+    counts exchange and the decoded-shard reassembly are collectives — they
+    are modeled as shard_gather_us, not measured here.
+    """
+    from repro.kernels.bernoulli_wire import ops as bw_ops
+
+    ds = -(-d // n)
+    keys = jnp.stack([jax.random.fold_in(key, i) for i in range(n)])
+    rows32 = rows.astype(jnp.float32)
+    regen = jax.jit(lambda k: bw_ops.support_shard(k, p, d, 0, ds))
+    regenerate_us = _time(regen, keys)
+    sent = regen(keys)
+    prior = jnp.zeros((n,), jnp.int32)
+    acc = jax.jit(lambda r, s, pr: bw_ops.decode_sum_shard(
+        r[:, :-1], r[:, -1], keys, s, pr, 0, p=p, cap=cap, d=d))
+    accumulate_us = _time(acc, rows32, sent, prior)
+    return regenerate_us, accumulate_us
+
+
 _CACHE: dict = {}
 
 
 def collect(d: int = D_DEFAULT) -> dict:
     """{preset: {pack_us, decode_us, unpack_us, wire_us, modeled_us,
-    row_bytes}} at dimension d (memoized per d)."""
+    row_bytes, decode_stages}} at dimension d plus the Bernoulli
+    decode_n_sweep (memoized per d)."""
     if d in _CACHE:
         return _CACHE[d]
-    from repro.core import wire
+    from repro.core import comm_cost, wire
 
     key = jax.random.PRNGKey(0)
     flat = jax.random.normal(key, (d,), jnp.float32) * 0.3
-    res = {"d": d, "n": N, "link_mbps": _link_mbps(), "presets": {}}
+    res = {"d": d, "n": N, "link_mbps": _link_mbps(),
+           "mesh_mbps": _mesh_mbps(), "presets": {}}
     for name, cfg in sorted(_preset_cfgs().items()):
         if cfg.mode == "none":
             # exact f32 all-reduce: no codec compute, dense psum wire.
-            entry = {"pack_us": 0.0, "decode_us": 0.0, "unpack_us": 0.0,
-                     "row_bytes": d * 4, "wire_us": _wire_us(d * 4, "psum", N)}
+            entry = {"pack_us": 0.0, "decode_us": 0.0, "unpack_us": None,
+                     "row_bytes": d * 4, "wire_us": _wire_us(d * 4, "psum", N),
+                     "decode_stages": None}
         else:
             codec = wire.resolve(cfg)
             pack = jax.jit(lambda f, k, c=codec, g=cfg: c.pack(f, k, 0, g))
@@ -103,16 +159,29 @@ def collect(d: int = D_DEFAULT) -> dict:
             rows = jnp.stack([codec.pack(flat, key, i, cfg)
                               for i in range(N)])
             row_bytes = int(rows[0].size) * rows[0].dtype.itemsize
+            stages = None
             if codec.reduce == "psum":
                 wire_buf = jnp.mean(rows.astype(jnp.float32), axis=0)
                 dec = jax.jit(lambda w, k, c=codec, g=cfg:
                               c.decode_reduced(w, k, g, d))
                 decode_us = _time(dec, wire_buf, key)
+            elif cfg.scatter_decode and not cfg.inner_axes:
+                # §12 flat scatter: per-device decode is the shard view.
+                p = float(cfg.encoder.fraction)
+                cap = comm_cost.bernoulli_capacity(d, p)
+                regen_us, acc_us = _bernoulli_shard_stage_us(
+                    rows, key, p, cap, d, N)
+                gather_us = (codec.scatter_bits(N, d, cfg)
+                             * (N - 1) / N / _mesh_mbps())
+                stages = {"regenerate_us": regen_us,
+                          "accumulate_us": acc_us,
+                          "shard_gather_us": gather_us}
+                decode_us = regen_us + acc_us
             else:
                 dec = jax.jit(lambda r, k, c=codec, g=cfg:
                               c.decode_gathered(r, k, g, d, N))
                 decode_us = _time(dec, rows, key)
-            unpack_us = 0.0
+            unpack_us = None
             if codec.stateful:
                 # EF reconstructs its own contribution for the residual.
                 unp = jax.jit(lambda r, k, c=codec, g=cfg:
@@ -120,13 +189,53 @@ def collect(d: int = D_DEFAULT) -> dict:
                 unpack_us = _time(unp, rows[0], key)
             entry = {"pack_us": pack_us, "decode_us": decode_us,
                      "unpack_us": unpack_us, "row_bytes": row_bytes,
-                     "wire_us": _wire_us(row_bytes, codec.reduce, N)}
-        entry["modeled_us"] = (entry["pack_us"] + entry["decode_us"]
-                               + entry["unpack_us"] + entry["wire_us"])
-        res["presets"][name] = {k: round(v, 1) if isinstance(v, float) else v
-                                for k, v in entry.items()}
+                     "wire_us": _wire_us(row_bytes, codec.reduce, N),
+                     "decode_stages": stages}
+        entry["modeled_us"] = (
+            entry["pack_us"] + entry["decode_us"] + (entry["unpack_us"] or 0.0)
+            + entry["wire_us"]
+            + (entry["decode_stages"] or {}).get("shard_gather_us", 0.0))
+        res["presets"][name] = {
+            k: (round(v, 1) if isinstance(v, float) else
+                {s: round(u, 1) for s, u in v.items()}
+                if isinstance(v, dict) else v)
+            for k, v in entry.items()}
+    res["decode_n_sweep"] = _decode_n_sweep()
     _CACHE[d] = res
     return res
+
+
+def _decode_n_sweep(d: int = SWEEP_D, ns: tuple = SWEEP_NS) -> dict:
+    """Full O(n·d) vs per-shard O(d) Bernoulli seed decode across n.
+
+    ``full_us`` times ``decode_gathered`` over all n peer rows (every
+    coordinate); ``shard_us`` the §12 per-device work (support_shard +
+    decode_sum_shard over one ⌈d/n⌉ shard).  full_us grows ~linearly in
+    n while shard_us stays ~flat — the decode-scaling claim in one table.
+    """
+    import dataclasses as dc
+
+    from repro.configs import registry as cfg_registry
+    from repro.core import comm_cost, wire
+
+    cfg = dc.replace(cfg_registry.compression_preset(
+        "bernoulli_seed_1bit", axes=("data",)), min_compress_size=0)
+    flat_cfg = dc.replace(cfg, scatter_decode=False)
+    codec = wire.resolve(cfg)
+    p = float(cfg.encoder.fraction)
+    cap = comm_cost.bernoulli_capacity(d, p)
+    key = jax.random.PRNGKey(0)
+    flat = jax.random.normal(key, (d,), jnp.float32) * 0.3
+    out = {"d": d, "codec": "bernoulli", "ns": {}}
+    for n in ns:
+        rows = jnp.stack([codec.pack(flat, key, i, cfg) for i in range(n)])
+        dec = jax.jit(lambda r, k, c=codec, g=flat_cfg, m=n:
+                      c.decode_gathered(r, k, g, d, m))
+        full_us = _time(dec, rows, key)
+        regen_us, acc_us = _bernoulli_shard_stage_us(rows, key, p, cap, d, n)
+        out["ns"][str(n)] = {"full_us": round(full_us, 1),
+                             "shard_us": round(regen_us + acc_us, 1)}
+    return out
 
 
 def check_compressed_beats_dense(res: dict) -> list:
@@ -141,6 +250,29 @@ def check_compressed_beats_dense(res: dict) -> list:
             and not e["modeled_us"] < dense_us]
 
 
+def check_decode_scaling(res: dict, baseline: dict | None) -> list:
+    """`bernoulli_seed_1bit` decode_us must not regress above the committed
+    BENCH_collectives.json baseline (must be empty).
+
+    ``baseline`` is the previously-committed JSON record, read BEFORE the
+    run overwrites it; ``BENCH_DECODE_TOL`` (default 2.0) absorbs
+    machine-to-machine noise without letting an O(n·d) decode sneak back
+    in (the flat-scatter shard decode is ~10× under the old full decode,
+    so 2× headroom still catches any structural regression).
+    """
+    try:
+        base = baseline["device_step"]["presets"]["bernoulli_seed_1bit"][
+            "decode_us"]
+    except (KeyError, TypeError):
+        return []  # no committed baseline to gate against
+    new = res["presets"]["bernoulli_seed_1bit"]["decode_us"]
+    tol = float(os.environ.get("BENCH_DECODE_TOL", 2.0))
+    if new > base * tol:
+        return [f"bernoulli_seed_1bit: decode {new:.0f}us > {tol:.1f}x "
+                f"committed baseline {base:.0f}us"]
+    return []
+
+
 def rows():
     t0 = time.perf_counter()
     res = collect()
@@ -150,6 +282,9 @@ def rows():
     dense_us = min(p[b]["modeled_us"] for b in DENSE_BASELINES)
     worst = max((e["modeled_us"], n) for n, e in p.items()
                 if n not in DENSE_BASELINES)
+    sweep = res["decode_n_sweep"]["ns"]
+    top = max(sweep, key=int)
+    e = sweep[top]
     return [{
         "name": f"device_step.d{res['d']}",
         "us_per_call": dt,
@@ -159,4 +294,12 @@ def rows():
                     + (f"; FAIL {bad}" if bad else
                        "; every compressed preset beats dense")),
         "check": not bad,
+    }, {
+        "name": f"device_step.decode_n_sweep.d{res['decode_n_sweep']['d']}",
+        "us_per_call": dt,
+        "derived": (f"n={top} bernoulli full={e['full_us'] / 1e3:.1f}ms "
+                    f"shard={e['shard_us'] / 1e3:.1f}ms "
+                    f"(x{e['full_us'] / max(e['shard_us'], 1):.1f})"),
+        # the per-shard decode must beat the full decode at the largest n.
+        "check": e["shard_us"] < e["full_us"],
     }]

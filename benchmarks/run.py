@@ -35,7 +35,10 @@ SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap", "device_step",
                    "node_sweep"}
 PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
 DEVICE_STEP_REQUIRED = {"pack_us", "decode_us", "unpack_us", "wire_us",
-                        "modeled_us", "row_bytes"}
+                        "modeled_us", "row_bytes", "decode_stages"}
+DECODE_STAGES_REQUIRED = {"regenerate_us", "accumulate_us", "shard_gather_us"}
+# node counts the Bernoulli full-vs-shard decode sweep must cover.
+DECODE_SWEEP_NS = {"2", "8"}
 OVERLAP_REQUIRED = {"overlap_us", "post_us", "overlap_launches",
                     "post_launches", "buckets", "schedule"}
 NODE_SWEEP_REQUIRED = {"flat_us", "hier_us", "flat_payload_bytes",
@@ -81,6 +84,23 @@ def validate_schema(res: dict) -> list:
             bad.append(f"device_step {name}: missing {sorted(miss)}")
         elif not (e["modeled_us"] > 0 and e["wire_us"] > 0):
             bad.append(f"device_step {name}: non-positive model {e}")
+        elif e["unpack_us"] == 0.0:
+            # presets with no unpack stage must report null, not a fake 0.
+            bad.append(f"device_step {name}: unpack_us must be null or a "
+                       f"real measurement, got 0.0")
+        elif e["decode_stages"] is not None and \
+                DECODE_STAGES_REQUIRED - set(e["decode_stages"]):
+            bad.append(f"device_step {name}: decode_stages missing "
+                       f"{sorted(DECODE_STAGES_REQUIRED - set(e['decode_stages']))}")
+    sweep_ns = ds.get("decode_n_sweep", {}).get("ns", {})
+    missing_sw = DECODE_SWEEP_NS - set(sweep_ns)
+    if missing_sw:
+        bad.append(f"device_step.decode_n_sweep: missing node counts "
+                   f"{sorted(missing_sw)}")
+    for n, e in sweep_ns.items():
+        if not (e.get("full_us", 0) > 0 and e.get("shard_us", 0) > 0):
+            bad.append(f"device_step.decode_n_sweep n={n}: "
+                       f"non-positive measurements {e}")
     sweep = res.get("node_sweep", {})
     missing_ns = CORE_NODE_COUNTS - set(sweep)
     if missing_ns:
@@ -131,6 +151,13 @@ def main(argv=None) -> None:
     from benchmarks import (bench_bucketing, bench_collectives,
                             bench_device_step)
 
+    # committed baseline for the decode-scaling gate: read BEFORE the run
+    # overwrites the JSON record.
+    try:
+        baseline = json.loads(args.json.read_text())
+    except (OSError, ValueError):
+        baseline = None
+
     if args.smoke:
         res = bench_collectives.collect(d=1 << 16, reps=1)
         res["smoke"] = True
@@ -146,6 +173,8 @@ def main(argv=None) -> None:
         failed = write_collectives_json(args.json, res)
         failed += bench_device_step.check_compressed_beats_dense(
             res["device_step"])
+        failed += bench_device_step.check_decode_scaling(
+            res["device_step"], baseline)
         failed += bench_collectives.check_node_scaling(res["node_sweep"])
         if failed:
             print(f"FAILED smoke checks: {failed}", file=sys.stderr)
@@ -177,6 +206,8 @@ def main(argv=None) -> None:
         failed.append(f"collectives.json: {str(e)[-300:]}")
     else:
         failed += write_collectives_json(args.json, res)
+        failed += bench_device_step.check_decode_scaling(
+            res["device_step"], baseline)
     if failed:
         print(f"FAILED checks: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -61,10 +61,14 @@ COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
     # Example 7: fixed-k at k/d = 1/r, TPU-native shared support (psum).
     "fixed_k_1bit": _TRAIN_COMPRESSION,
     # Eq. (1) at p = 1/r via the §4.4 seed trick (capacity-padded values).
+    # Flat-mesh scatter decode (docs/DESIGN.md §12): each node decodes only
+    # its ⌈d/n⌉ coordinate shard of all n peer rows — per-node decode FLOPs
+    # and PRNG draws drop from O(n·d) to O(d); the decoded-shard all_gather
+    # is billed honestly via the codec's scatter_bits.
     "bernoulli_seed_1bit": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="bernoulli", fraction=1.0 / 16,
                                        center="mean"),
-        mode="gather_decode", axes=("pod",)),
+        mode="gather_decode", axes=("pod",), scatter_decode=True),
     # §4.5 Eq. (11): packed 1-bit sign plane + (vmin, vmax) tail.
     "binary_packed": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="binary", center="min"),
@@ -101,10 +105,14 @@ COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
         encoder=core_types.EncoderSpec(kind="fixed_k", fraction=1.0 / 16,
                                        center="mean"),
         mode="gather_decode", axes=("pod",), error_feedback=True),
+    # flat scatter decode like bernoulli_seed_1bit (EF delegates the shard
+    # decode to the inner codec; payload-equality with the EF-free preset
+    # is preserved because both gain the same scatter collectives).
     "ef_bernoulli": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="bernoulli", fraction=1.0 / 16,
                                        center="mean"),
-        mode="gather_decode", axes=("pod",), error_feedback=True),
+        mode="gather_decode", axes=("pod",), error_feedback=True,
+        scatter_decode=True),
     "ef_binary": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="binary", center="min"),
         mode="gather_decode", axes=("pod",), error_feedback=True),
@@ -146,7 +154,9 @@ def compression_preset(name: str,
     ``scatter_decode`` with them, when none remain), so e.g. the ``hier_*``
     presets degrade to their plain flat codec on a single-axis mesh —
     every all-preset enumeration (benchmarks, golden wire matrix,
-    distributed checks) keeps working unchanged.
+    distributed checks) keeps working unchanged.  A preset that was flat
+    to begin with keeps its ``scatter_decode`` — the flat-mesh scatter
+    (DESIGN.md §12) shards over the re-pointed axes themselves.
     """
     if name not in COMPRESSION_PRESETS:
         raise KeyError(f"unknown compression preset {name!r}; "
@@ -157,7 +167,8 @@ def compression_preset(name: str,
     inner = tuple(a for a in cfg.inner_axes if a not in axes)
     return dataclasses.replace(
         cfg, axes=axes, inner_axes=inner,
-        scatter_decode=cfg.scatter_decode and bool(inner))
+        scatter_decode=cfg.scatter_decode
+        and (bool(inner) == bool(cfg.inner_axes)))
 
 
 def get_run_config(arch: str, shape: str, *, multi_pod: bool = False,

@@ -184,10 +184,19 @@ def cost_config(cfg, *, n: int, d: int, mesh_sizes=None) -> float:
     billed at :func:`repro.core.wire.effective_nodes`, which needs
     ``mesh_sizes`` (axis name → size) to derive the split.  Flat configs
     ignore ``mesh_sizes``.
+
+    A FLAT scatter decode (``cfg.scatter_decode`` with empty
+    ``inner_axes``, DESIGN.md §12) runs its auxiliary collectives —
+    decoded-shard all_gather + codec bookkeeping — over the main axes,
+    so their bytes are billed too via ``codec.scatter_bits`` (zero for
+    every other config; the hierarchical shard gather rides the free
+    inner link per the §11 convention).
     """
     from repro.core import wire  # local import: wire consumes this module
     n_eff = wire.effective_nodes(cfg, n, mesh_sizes)
-    return float(wire.resolve(cfg).comm_cost_bits(n_eff, d, cfg))
+    codec = wire.resolve(cfg)
+    return float(codec.comm_cost_bits(n_eff, d, cfg)
+                 + codec.scatter_bits(n_eff, d, cfg))
 
 
 # --- realized cost of one encoded round ----------------------------------- #

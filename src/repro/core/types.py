@@ -172,13 +172,17 @@ class CompressionConfig:
 
     ``scatter_decode`` selects the reduce-scatter decode decomposition for
     the linear gather codecs (fixed_k / bernoulli and their rotated/EF
-    wraps): each node decodes only its 1/m shard of the bucket (m = the
-    inner-group size) and one all_gather of decoded shards over the inner
-    axes replaces the n-message broadcast, cutting decode FLOPs and peak
-    memory from O(n·d) to O(n·d/m).  Bit-exact vs the flat decode by
-    construction (same per-coordinate arithmetic, only partitioned);
-    requires non-empty ``inner_axes`` and a codec that declares
-    ``scatter_supported`` (validated by the registry at resolve time).
+    wraps): each node decodes only its contiguous 1/m shard of the bucket
+    and one all_gather of decoded shards reassembles the estimate, cutting
+    per-node decode FLOPs and PRNG draws from O(n·d) to O(n·d/m).  The
+    shard axes are ``inner_axes`` when non-empty (hierarchical schedule,
+    DESIGN.md §11: m = the inner-group size, the shard gather rides the
+    fast intra-host link for free) and ``axes`` themselves otherwise
+    (flat mesh, DESIGN.md §12: m = n, the shard gather rides the main
+    mesh and is billed by ``WireCodec.scatter_bits``).  Bit-exact vs the
+    flat decode by construction (same per-coordinate arithmetic, only
+    partitioned); requires a codec that declares ``scatter_supported``
+    (validated by the registry at resolve time).
     """
 
     encoder: EncoderSpec = dataclasses.field(default_factory=EncoderSpec)
@@ -207,11 +211,6 @@ class CompressionConfig:
             raise ValueError(
                 f"inner_axes and axes must be disjoint; both contain "
                 f"{sorted(overlap)}")
-        if self.scatter_decode and not self.inner_axes:
-            raise ValueError(
-                "scatter_decode shards the decode over inner_axes and "
-                "needs at least one (the decoded-shard all_gather rides "
-                "the inner axes)")
 
 
 def fixed_k_from_fraction(d: int, fraction: float) -> int:

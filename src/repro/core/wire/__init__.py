@@ -7,7 +7,8 @@ production base paths plus the shipped §7.2 rotated and error-feedback
 compositions — and is the single dispatch rule consulted by collectives,
 comm_cost, bucketing, configs and benchmarks.
 """
-from repro.core.wire.base import WireCodec, effective_nodes  # noqa: F401
+from repro.core.wire.base import (  # noqa: F401
+    WireCodec, effective_nodes, scatter_axes)
 from repro.core.wire.ef import EFCodec  # noqa: F401
 from repro.core.wire.registry import (  # noqa: F401
     gather_kind, get, names, register, resolve)

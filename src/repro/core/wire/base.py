@@ -76,6 +76,19 @@ def gather_nested(v, axes: Axes):
     return out
 
 
+def scatter_axes(cfg: t.CompressionConfig) -> Axes:
+    """The mesh axes a scatter decode shards over (DESIGN.md §11/§12).
+
+    Hierarchical configs shard over the inner (fast, intra-host) axes —
+    the decoded-shard all_gather rides a link the accounting treats as
+    free.  Flat configs shard over the compression axes themselves: every
+    node decodes its own ⌈d/n⌉ coordinate slice of all n peer rows, and
+    the shard gather crosses the main mesh (billed by
+    :meth:`WireCodec.scatter_bits`).
+    """
+    return cfg.inner_axes if cfg.inner_axes else cfg.axes
+
+
 def effective_nodes(cfg: t.CompressionConfig, n: int,
                     mesh_sizes=None) -> int:
     """The codec's effective node count: the cross-host group size.
@@ -151,6 +164,21 @@ class WireCodec:
 
     def seed_bits(self, n: int, cfg: t.CompressionConfig) -> float:
         """Bits riding the implicit PRNG instead of the wire (§4.4 seeds)."""
+        return 0.0
+
+    def scatter_bits(self, n: int, d: int, cfg: t.CompressionConfig) -> float:
+        """Extra collective payload bits a FLAT scatter decode adds.
+
+        Flat-mesh scatter (``cfg.scatter_decode`` with empty
+        ``inner_axes``) runs its auxiliary collectives — the decoded-shard
+        all_gather and any codec bookkeeping like Bernoulli's per-shard
+        support counts — over the main compression axes, so their bytes
+        cross the same link as the wire and must be billed
+        (:func:`repro.core.comm_cost.cost_config` adds this term).
+        Hierarchical scatter shards over the inner (fast) axes and stays
+        billed at zero here, matching the §11 convention that intra-host
+        traffic is free.  Zero for codecs/configs without flat scatter.
+        """
         return 0.0
 
     def cost_spec(self, d: int, cfg: t.CompressionConfig):
@@ -284,18 +312,22 @@ class WireCodec:
         """all_gather the packed buffer over cfg.axes and decode.
 
         With ``cfg.scatter_decode`` the decode is reduce-scattered over
-        the inner axes: each node decodes only its contiguous 1/m shard
-        (m = the inner-group size) and one all_gather of decoded shards —
-        riding the fast inner link — reassembles the estimate.  Shards
-        concatenate in inner-rank order and pads sit past d, so the result
-        equals the flat decode bit-for-bit.
+        :func:`scatter_axes` — the inner axes when present (hierarchical,
+        1/m shard each, shard gather rides the fast inner link) or the
+        compression axes themselves (flat mesh, ⌈d/n⌉ shard each, shard
+        gather billed by :meth:`scatter_bits`).  Each node decodes only
+        its contiguous shard and one all_gather of decoded shards
+        reassembles the estimate.  Shards concatenate in shard-rank order
+        and pads sit past d, so the result equals the flat decode
+        bit-for-bit.
         """
         rows = gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
         if cfg.scatter_decode:
-            shard, nshards = axis_rank_size(cfg.inner_axes)
+            saxes = scatter_axes(cfg)
+            shard, nshards = axis_rank_size(saxes)
             part = self.decode_gathered_shard(rows, key, cfg, d, n,
                                               shard, nshards)
-            full = gather_nested(part, cfg.inner_axes).reshape(-1)
+            full = gather_nested(part, saxes).reshape(-1)
             return full[:d]
         return self.decode_gathered(rows, key, cfg, d, n)
 

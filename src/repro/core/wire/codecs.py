@@ -162,6 +162,16 @@ class FixedKGatherCodec(base.WireCodec):
                                 jnp.zeros((nb_s + 1, fk.BLOCK), jnp.float32))
         return (acc[:nb_s] / n + jnp.mean(all_mu)).reshape(-1)
 
+    def scatter_bits(self, n, d, cfg):
+        # flat scatter (DESIGN.md §12) adds ONE collective on the main
+        # axes: the decoded f32 shard all_gather (the dump-row window is
+        # analytic — no count exchange).  Hierarchical scatter rides the
+        # inner axes and is billed free (§11 convention).
+        if not cfg.scatter_decode or cfg.inner_axes:
+            return 0.0
+        nb_s = -(-fk.num_blocks(d) // n)
+        return float(n * nb_s * fk.BLOCK * 32)
+
 
 class FixedKSharedCodec(base.WireCodec):
     """shared_support fixed-k: one psum of [k wire values ‖ μ] + scatter.
@@ -325,12 +335,12 @@ class BernoulliCodec(base.WireCodec):
         # reduce-scatter decomposition.  Support ranks are global (a sent
         # coordinate's value slot is its rank in the FULL support), so each
         # shard needs every peer's support count strictly before its
-        # window: per-shard counts are all_gathered over the inner (fast)
-        # axes and exclusive-cumsummed — the single cross-host collective
-        # stays the wire-buffer all_gather in base.gather_decode.  Shard
-        # supports regenerate via scattered Threefry lanes
-        # (threefry.ref.uniform_at): only d/nshards draws per peer instead
-        # of d, which is where the O(n·d) → O(n·d/m) decode win comes from.
+        # window: per-shard counts are all_gathered over the scatter axes
+        # (inner when hierarchical, the main axes on the flat mesh) and
+        # exclusive-cumsummed.  Shard supports regenerate via scattered
+        # Threefry lanes (threefry.ref.uniform_at): only d/nshards draws
+        # per peer instead of d, which is where the O(n·d) → O(n·d/m)
+        # decode win comes from.
         p = float(cfg.encoder.fraction)
         cap = comm_cost.bernoulli_capacity(d, p)
         rows = rows.astype(jnp.float32)
@@ -339,12 +349,25 @@ class BernoulliCodec(base.WireCodec):
         start = shard * ds
         sent = bw_ops.support_shard(keys, p, d, start, ds)
         counts = jnp.sum(sent.astype(jnp.int32), axis=1)
-        allc = base.gather_nested(counts, cfg.inner_axes).reshape(nshards, n)
+        allc = base.gather_nested(
+            counts, base.scatter_axes(cfg)).reshape(nshards, n)
         prior = jnp.cumsum(allc, axis=0) - allc
         prior_here = jnp.take(prior, shard, axis=0)
-        total = bw_ops.decode_sum_shard(rows[:, :-1], rows[:, -1], sent,
-                                        prior_here, cap)
+        total = bw_ops.decode_sum_shard(rows[:, :-1], rows[:, -1], keys,
+                                        sent, prior_here, start,
+                                        p=p, cap=cap, d=d)
         return total / n
+
+    def scatter_bits(self, n, d, cfg):
+        # flat scatter (DESIGN.md §12) adds TWO collectives on the main
+        # axes: the per-shard support counts (n i32 per node — the global
+        # rank offsets) and the decoded f32 shard all_gather.
+        # Hierarchical scatter rides the inner axes and is billed free
+        # (§11 convention).
+        if not cfg.scatter_decode or cfg.inner_axes:
+            return 0.0
+        ds = -(-d // n)
+        return float(n * n * 32 + n * ds * 32)
 
 
 # --------------------------------------------------------------------------- #

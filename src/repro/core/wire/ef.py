@@ -123,8 +123,9 @@ def _ternary_twin(flat, cap, cfg):
     d = flat.shape[0]
     cap = min(cap, d)
     dev = jnp.abs(flat - jnp.mean(flat))
-    _, top = jax.lax.top_k(dev, cap)
-    passm = jnp.zeros((d,), bool).at[top].set(True)
+    # same membership as top_k(dev, cap) (ties → lowest index) but via the
+    # O(d)-per-pass bit bisection — top_k was the ef_ternary pack hot spot.
+    passm = bitplane.topcap_mask(dev, cap)
     c_lo, c_hi, hi = _two_means(flat, select=~passm)
     sym = jnp.where(passm, 2, jnp.where(hi, 1, 0)).astype(jnp.uint32)
     vbuf = bitplane.rank_scatter(flat, passm, cap)
@@ -247,6 +248,9 @@ class EFCodec(base.WireCodec):
 
     def comm_cost_bits(self, n, d, cfg):
         return self.inner.comm_cost_bits(n, d, cfg)
+
+    def scatter_bits(self, n, d, cfg):
+        return self.inner.scatter_bits(n, d, cfg)
 
     # ---- wire format: twin pack, inner decode ----------------------------- #
 

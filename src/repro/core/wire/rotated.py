@@ -69,6 +69,11 @@ class RotatedCodec(base.WireCodec):
     def cost_spec(self, d, cfg):
         return self.inner.cost_spec(rotation.padded_dim(d), cfg)
 
+    def scatter_bits(self, n, d, cfg):
+        # a flat scatter decode shards the ROTATED estimate, so the shard
+        # gather bytes are the inner codec's at the padded length.
+        return self.inner.scatter_bits(n, rotation.padded_dim(d), cfg)
+
     def comm_cost_bits(self, n, d, cfg):
         # inner analytic cost at the rotated length + the rotation seed
         # (r̄_s per node in the faithful star protocol; regenerated from

@@ -252,3 +252,91 @@ def decode_sum_pallas(bufs, mus, keys, *, p: float, cap: int, d: int,
         interpret=interpret,
     )(keys, mus, params, bufs3)
     return out.reshape(-1)[:d]
+
+
+def _decode_shard_kernel(keys_ref, mus_ref, par_ref, prior_ref, off_ref,
+                         buf_ref, o_ref, carry_ref, *,
+                         d: int, cap: int, ds: int):
+    """Shard view of :func:`_decode_kernel`: decode coordinates
+    [off, off+ds) of every peer's (d,) stream.
+
+    Identical rank bookkeeping — the SMEM carry just starts at the peer's
+    ``prior`` count (supports strictly before the shard, all_gathered by
+    the caller) instead of 0, and the Threefry lanes draw at the global
+    coordinate ``off + local``.  Shard-window lanes past d decode to μ
+    (matching ref.decode_sum_shard; the caller truncates), block-padding
+    lanes past ds contribute 0.
+    """
+    i = pl.program_id(0)   # peer (slow axis: buffer stays resident)
+    j = pl.program_id(1)   # coordinate block within the shard
+
+    @pl.when(j == 0)
+    def _reset():
+        carry_ref[0] = prior_ref[i]
+
+    lidx, inblock = _block_coords(j, ds)
+    gidx = off_ref[0] + lidx
+    real = inblock & (gidx < d)
+    p = par_ref[0]
+    u = _uniform_block(keys_ref[i, 0], keys_ref[i, 1],
+                       jnp.where(real, gidx, 0), d)
+    sent = real & (u < p)
+
+    carry = carry_ref[0]
+    incl = _flat_cumsum(sent)
+    valid, row_start, local = _rank_window(carry, incl, sent, cap)
+
+    window = buf_ref[0, pl.ds(row_start, WIN_ROWS), :].reshape(WIN, 1)
+    vals = jax.lax.dot(_onehot(local, valid), window,
+                       precision=_HIGHEST).reshape(BM_ROWS, LANES)
+    mu = mus_ref[i]
+    recon = jnp.where(inblock, jnp.where(valid, vals, mu), 0.0)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += recon
+    carry_ref[0] = carry + incl[BM_ROWS - 1, LANES - 1]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("p", "cap", "d", "ds", "interpret"))
+def decode_sum_shard_pallas(bufs, mus, keys, prior, start, *, p: float,
+                            cap: int, d: int, ds: int,
+                            interpret: bool = False):
+    """bufs: (n, cap) f32; mus: (n,) f32; keys: (n, 2) uint32; prior: (n,)
+    int32 support counts strictly before the shard; start: int32 global
+    offset (may be traced — the shard index inside shard_map).
+
+    Returns the [start, start+ds) slice of Σ_i reconstruction_i as (ds,)
+    f32, regenerating the shard supports in-kernel (fused regenerate +
+    select + accumulate) — bit-exact vs ref.support_shard +
+    ref.decode_sum_shard.  Caller divides by n.
+    """
+    n = bufs.shape[0]
+    rows_ds = num_coord_rows(ds)
+    rows_cap = num_buffer_rows(cap)
+    bufs3 = jnp.pad(bufs.astype(jnp.float32),
+                    ((0, 0), (0, rows_cap * LANES - cap))
+                    ).reshape(n, rows_cap, LANES)
+    keys = jnp.asarray(keys).reshape(n, 2).astype(jnp.uint32)
+    mus = jnp.asarray(mus, jnp.float32)
+    params = jnp.stack([jnp.float32(p)])
+    prior = jnp.asarray(prior, jnp.int32).reshape(n)
+    off = jnp.asarray(start, jnp.int32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(n, rows_ds // BM_ROWS),
+        in_specs=[pl.BlockSpec((1, rows_cap, LANES),
+                               lambda i, j, *_: (i, 0, 0))],
+        out_specs=pl.BlockSpec((BM_ROWS, LANES), lambda i, j, *_: (j, 0)),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_shard_kernel, d=d, cap=cap, ds=ds),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows_ds, LANES), jnp.float32),
+        interpret=interpret,
+    )(keys, mus, params, prior, off, bufs3)
+    return out.reshape(-1)[:ds]

@@ -47,14 +47,29 @@ def support_shard(keys, p: float, d: int, start, ds: int):
     """(n, ds) slice [start, start+ds) of every peer's support draw.
 
     The reduce-scatter decode's per-shard support regeneration (scattered
-    Threefry lanes only, repro.kernels.threefry.ref.uniform_at).  jnp-only
-    for now on every backend — a fused Pallas shard kernel would inline
-    the same counter math (repro.kernels.bernoulli_wire.kernel's decode
-    already does, over the full range).
+    Threefry lanes only, repro.kernels.threefry.ref.uniform_at).  jnp on
+    every backend: the codec needs the per-shard counts BEFORE the decode
+    (the rank-offset all_gather), so this stays a separate cheap dispatch;
+    the shard decode kernel re-draws the same lanes in-kernel.
     """
     return ref.support_shard(keys, p, d, start, ds)
 
 
-def decode_sum_shard(bufs, mus, sent, prior, cap: int):
-    """Shard-restricted Σ_i reconstruction_i; see ref.decode_sum_shard."""
+def decode_sum_shard(bufs, mus, keys, sent, prior, start, *, p: float,
+                     cap: int, d: int, force_pallas: bool = False):
+    """Shard-restricted Σ_i reconstruction_i as (ds,) f32.
+
+    ``sent`` is the (n, ds) support slice from :func:`support_shard` (the
+    caller already drew it for the rank-offset counts); ``prior`` the (n,)
+    support counts strictly before the shard; ``start`` the (possibly
+    traced) global shard offset.  The jnp path selects+accumulates against
+    the precomputed ``sent``; the Pallas path runs the fused shard-view
+    kernel, regenerating the identical supports in-kernel from ``keys``
+    (bit-exact — same Threefry lanes).
+    """
+    use_pallas, interpret = backend.choose(force_pallas)
+    if use_pallas:
+        return kernel.decode_sum_shard_pallas(
+            bufs, mus, keys, prior, start, p=p, cap=cap, d=d,
+            ds=sent.shape[1], interpret=interpret)
     return ref.decode_sum_shard(bufs, mus, sent, prior, cap)

@@ -80,22 +80,101 @@ def decode_one(buf, key, p: float, cap: int, mu, d: int):
     return jnp.where(valid, vals, mu)
 
 
+# Coordinates per tile of the streamed decode accumulation.  Large enough
+# that the per-tile Threefry dispatch amortizes, small enough that the
+# (n, TILE) working set stays cache-resident instead of materializing the
+# full (n, d) uniform matrix the historical vmap decode built.
+DECODE_TILE = 8192
+# Group width of the matmul cumsum: rows reshape to (·, L) and one
+# (L, L)-triangular f32 matmul yields the within-group inclusive counts.
+_CUMSUM_GROUP = 32
+
+
+def _cumsum_rows(sent):
+    """Inclusive int32 cumsum along axis 1 of an (n, T) bool matrix.
+
+    Expressed as one f32 matmul against a triangular ones matrix per
+    :data:`_CUMSUM_GROUP`-wide group plus a cheap group-prefix add — the
+    XLA CPU int32 cumsum lowers to a serial scan, the matmul vectorizes
+    (~2× the decode-shard wall-clock).  Exact because the f32 partial sums
+    count 0/1 lanes and never exceed T ≤ 2²⁴; rows longer than that (or
+    not group-aligned) fall back to the plain scan.
+    """
+    n, tl = sent.shape
+    grp = _CUMSUM_GROUP
+    if tl % grp or tl > (1 << 24):
+        return jnp.cumsum(sent.astype(jnp.int32), axis=1)
+    g = sent.reshape(n, tl // grp, grp).astype(jnp.float32)
+    tri = jnp.triu(jnp.ones((grp, grp), jnp.float32))
+    within = jax.lax.dot_general(
+        g, tri, (((2,), (0,)), ((), ())),
+        precision=jax.lax.Precision.HIGHEST)
+    totals = within[:, :, -1]
+    prefix = jnp.cumsum(totals, axis=1) - totals
+    return (within + prefix[:, :, None]).reshape(n, tl).astype(jnp.int32)
+
+
+def _peer_sum(recon):
+    """Peer-linear f32 sum over axis 0: ((r_0 + r_1) + r_2) + … .
+
+    NOT ``jnp.sum(recon, axis=0)`` — XLA's reduce is free to tree-combine
+    the peer axis, which reassociates the f32 adds and drifts from the
+    peer-major accumulation order of :func:`decode_sum_sequential` and of
+    the Pallas decode kernel (one grid step per peer).  Unrolling the
+    (static, small) peer count pins the order, making the batched decodes
+    bit-exact vs the sequential oracle.
+    """
+    acc = recon[0]
+    for i in range(1, recon.shape[0]):
+        acc = acc + recon[i]
+    return acc
+
+
 def decode_sum(bufs, mus, keys, p: float, cap: int, d: int):
-    """Σ_i reconstruction_i without materializing per-peer dense vectors
-    one at a time: all peers' supports regenerate in one batched Threefry
-    dispatch and fold into the accumulator in a single fused graph.
+    """Σ_i reconstruction_i, streamed tile-by-tile over the coordinates.
 
     bufs: (n, cap) f32 value buffers;  mus: (n,) f32;  keys: (n, 2) uint32
     (already rank-folded).  Caller divides by n.
+
+    Each :data:`DECODE_TILE`-wide tile runs a fused regenerate → select →
+    accumulate body: the peers' support slice regenerates via the
+    random-access Threefry lanes (:func:`repro.kernels.threefry.ref
+    .uniform_at` — bit-exact vs the ``jax.random.uniform(key, (d,)) < p``
+    rule peers encode with), support ranks come from the carried per-peer
+    prior count plus a within-tile matmul cumsum, and the tile's
+    peer-linear sum lands in the accumulator.  Identical integers as the
+    historical one-shot vmap decode (which materialized the full (n, d)
+    uniform matrix) and the sequential oracle's per-coordinate f32 add
+    order (:func:`_peer_sum`), so the result equals
+    :func:`decode_sum_sequential` bit-for-bit — with an (n, TILE)
+    working set instead of (n, d).
     """
-    u = jax.vmap(
-        lambda k: jax.random.uniform(k, (d,), dtype=jnp.float32))(keys)
-    sent = u < p
-    pos = jnp.cumsum(sent.astype(jnp.int32), axis=1) - 1
-    valid = sent & (pos < cap)
-    vals = jnp.take_along_axis(bufs, jnp.clip(pos, 0, cap - 1), axis=1)
-    recon = jnp.where(valid, vals, mus[:, None])
-    return jnp.sum(recon, axis=0)
+    n = bufs.shape[0]
+    grp = _CUMSUM_GROUP
+    tile = min(DECODE_TILE, -(-d // grp) * grp)
+    nt = -(-d // tile)
+
+    def body(ti, carry):
+        acc, prior = carry
+        start = ti * tile
+        idx = start + jnp.arange(tile, dtype=jnp.int32)
+        real = idx < d
+        idxc = jnp.where(real, idx, 0)
+        u = jax.vmap(lambda k: tf_ref.uniform_at(k, idxc, d))(keys)
+        sent = (u < p) & real[None, :]
+        incl = _cumsum_rows(sent)
+        pos = prior[:, None] + incl - 1
+        valid = sent & (pos < cap)
+        vals = jnp.take_along_axis(bufs, jnp.clip(pos, 0, cap - 1), axis=1)
+        recon = jnp.where(valid, vals, mus[:, None])
+        acc = jax.lax.dynamic_update_slice(
+            acc, _peer_sum(recon), (start,))
+        return acc, prior + incl[:, -1]
+
+    acc, _ = jax.lax.fori_loop(
+        0, nt, body, (jnp.zeros((nt * tile,), jnp.float32),
+                      jnp.zeros((n,), jnp.int32)))
+    return acc[:d]
 
 
 def support_shard(keys, p: float, d: int, start, ds: int):
@@ -121,15 +200,16 @@ def decode_sum_shard(bufs, mus, sent, prior, cap: int):
     ``prior``: (n,) support counts of each peer strictly before the shard
     (the rank offset — a per-peer exclusive cumsum of per-shard counts,
     computed by the caller).  Same per-coordinate arithmetic as
-    :func:`decode_sum`: rank = prior + within-shard cumsum − 1, ranks ≥
+    :func:`decode_sum`: rank = prior + within-shard cumsum − 1 (the
+    cumsum via the vectorized matmul form, identical integers), ranks ≥
     cap fall back to μ.  Padding lanes (sent False) also decode to μ and
     must be truncated by the caller.
     """
-    pos = prior[:, None] + jnp.cumsum(sent.astype(jnp.int32), axis=1) - 1
+    pos = prior[:, None] + _cumsum_rows(sent) - 1
     valid = sent & (pos < cap)
     vals = jnp.take_along_axis(bufs, jnp.clip(pos, 0, cap - 1), axis=1)
     recon = jnp.where(valid, vals, mus[:, None])
-    return jnp.sum(recon, axis=0)
+    return _peer_sum(recon)
 
 
 def decode_sum_sequential(bufs, mus, keys, p: float, cap: int, d: int):

@@ -306,7 +306,12 @@ def bucket_wire_bits(plan: BucketPlan, cfg: t.CompressionConfig,
         return {}
     n_eff = wire.effective_nodes(cfg, n, mesh_sizes)
     codec = wire.resolve(cfg)
-    return {b.bid: float(codec.wire_bits(n_eff, b.size, cfg))
+    # flat-scatter buckets (§12) additionally ship the rank-offset counts
+    # and the decoded-shard gather on the same axes — billed by
+    # scatter_bits (0 for every non-scatter / hierarchical config, whose
+    # extra collectives ride the free inner link per the §11 convention).
+    return {b.bid: float(codec.wire_bits(n_eff, b.size, cfg)
+                         + codec.scatter_bits(n_eff, b.size, cfg))
             for b in plan.buckets if b.kind == "compressed"}
 
 
@@ -350,12 +355,15 @@ def _bucket_cfg(b: Bucket, cmp: t.CompressionConfig, *,
     """The per-bucket codec config: compression axes narrowed to the
     bucket's caxes and the hierarchical inner axes narrowed to the ones
     the bucket actually syncs over (its eaxes) — a leaf already sharded
-    over an inner axis has no inner group to pre-reduce, and
-    scatter_decode degrades with it (nothing to scatter over)."""
+    over an inner axis has no inner group to pre-reduce, and hierarchical
+    scatter_decode degrades with it (nothing to scatter over).  A flat
+    config (no inner axes to begin with) keeps its scatter_decode: the
+    flat-mesh scatter (DESIGN.md §12) shards over the bucket's caxes."""
     inner = tuple(a for a in b.eaxes if a in cmp.inner_axes)
     return dataclasses.replace(
         cmp, axes=b.caxes, inner_axes=inner,
-        scatter_decode=cmp.scatter_decode and bool(inner),
+        scatter_decode=cmp.scatter_decode
+        and (bool(inner) == bool(cmp.inner_axes)),
         error_feedback=error_feedback)
 
 

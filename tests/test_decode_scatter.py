@@ -1,0 +1,205 @@
+"""Bit-exactness of the tiled + sharded Bernoulli seed decode (§12).
+
+The production decode paths rewritten for the flat-mesh reduce-scatter
+work must equal ``decode_sum_sequential`` — the peer-major fori oracle
+whose accumulation order the fused kernels pin — BIT FOR BIT:
+
+* the tiled batched ``ref.decode_sum`` (streams d-tiles through a fused
+  regenerate+select+accumulate body with the matmul-cumsum rank
+  arithmetic and linear-order peer adds);
+* the shard decomposition: ``support_shard`` + rank-offset priors +
+  ``decode_sum_shard`` per contiguous ⌈d/nshards⌉ window, shards
+  concatenated — including non-divisible d/nshards remainders, where the
+  tail shard is short and padding lanes must vanish;
+* the Pallas shard-view kernel (interpret mode), which regenerates the
+  identical Threefry lanes in-kernel.
+
+Decode equality needs no encode: ``bufs`` are arbitrary (n, cap) value
+buffers — using random buffers (not roundtripped packs) exercises every
+rank/cap combination directly, including cap-overflow drops (counts past
+``cap`` fall back to μ symmetrically in every path).
+
+The deterministic sweeps always run (the CI kernel-interpret job points
+here); the hypothesis layer widens the input space when installed, same
+pattern as tests/test_bernoulli_wire_kernels.py.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bernoulli_wire import ops, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # optional dep — the parametrized sweeps still pin
+    HAS_HYPOTHESIS = False
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.distributed
+def test_flat_scatter_check():
+    """8-fake-device half: bit-exactness vs the no-scatter flat reference,
+    HLO collective counts and payload-bit accounting, bucketed sync —
+    tests/distributed_checks/flat_scatter_check.py."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_checks" /
+                             "flat_scatter_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, \
+        f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL FLAT SCATTER CHECKS PASSED" in res.stdout
+
+
+def _case(seed, n, d, cap):
+    """Arbitrary (bufs, mus, keys) decode inputs — no encode involved."""
+    k = jax.random.PRNGKey(seed)
+    bufs = jax.random.normal(jax.random.fold_in(k, 0), (n, cap)) * 0.7
+    mus = jax.random.normal(jax.random.fold_in(k, 1), (n,)) * 0.1
+    keys = jnp.stack([jax.random.key_data(
+        jax.random.fold_in(jax.random.PRNGKey(seed + 7), i))
+        for i in range(n)])
+    return bufs, mus, keys
+
+
+def _shard_stitch(bufs, mus, keys, p, cap, d, nshards, force_pallas=False):
+    """Concatenate the nshards shard decodes — the §12 reassembly."""
+    n = bufs.shape[0]
+    ds = -(-d // nshards)
+    sent_all = jnp.stack([ref.support_shard(keys, p, d, s * ds, ds)
+                          for s in range(nshards)])
+    counts = jnp.sum(sent_all.astype(jnp.int32), axis=2)   # (nshards, n)
+    prior = jnp.cumsum(counts, axis=0) - counts
+    parts = [ops.decode_sum_shard(bufs, mus, keys, sent_all[s], prior[s],
+                                  s * ds, p=p, cap=cap, d=d,
+                                  force_pallas=force_pallas)
+             for s in range(nshards)]
+    return jnp.concatenate(parts)[:d]
+
+
+# --------------------------------------------------------------------------- #
+# tiled batched decode == sequential oracle, bit for bit.
+# --------------------------------------------------------------------------- #
+
+# d crosses the 8192-coordinate tile boundary (tiled fori path) and the
+# 32-lane matmul-cumsum group, with non-round remainders throughout.
+@pytest.mark.parametrize("d", (1, 33, 1000, 4103, 8192, 8200, 20000))
+@pytest.mark.parametrize("n", (1, 2, 8))
+@pytest.mark.parametrize("p", (0.0625, 0.5, 0.9))
+def test_tiled_decode_sum_equals_sequential(d, n, p):
+    cap = max(1, int(d * p * 1.1))
+    bufs, mus, keys = _case(d + n, n, d, cap)
+    want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
+    got = ref.decode_sum(bufs, mus, keys, p, cap, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tiled_decode_sum_cap_overflow_drops():
+    """cap far below the expected support: the overflow tail must fall
+    back to μ in both paths identically (and μ must actually appear)."""
+    d, n, p = 5000, 4, 0.5
+    cap = 100
+    bufs, mus, keys = _case(5, n, d, cap)
+    want = np.asarray(ref.decode_sum_sequential(bufs, mus, keys, p, cap, d))
+    got = np.asarray(ref.decode_sum(bufs, mus, keys, p, cap, d))
+    np.testing.assert_array_equal(got, want)
+    # with ~2500 sends against cap=100 the tail is all-μ: the last
+    # coordinates equal Σ_i μ_i exactly in the oracle too.
+    assert np.array_equal(got[-1], np.asarray(ref.decode_sum_sequential(
+        bufs, mus, keys, p, cap, d))[-1])
+
+
+# --------------------------------------------------------------------------- #
+# shard decomposition == sequential oracle, incl. remainders.
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("d,nshards", (
+    (64, 1), (1000, 2), (4103, 3), (4103, 8), (1 << 13, 8), (97, 8)))
+@pytest.mark.parametrize("n", (1, 2, 8))
+def test_shard_stitch_equals_sequential(d, nshards, n):
+    p = 0.3
+    cap = max(1, int(d * p * 1.2))
+    bufs, mus, keys = _case(d + nshards, n, d, cap)
+    want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
+    got = _shard_stitch(bufs, mus, keys, p, cap, d, nshards)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_shard_stitch_cap_overflow_crosses_shards():
+    """The overflow boundary lands mid-shard: rank offsets must carry the
+    drop across shard windows exactly."""
+    d, n, p, nshards = 3000, 3, 0.5, 4
+    cap = 200                      # overflows inside the first shard
+    bufs, mus, keys = _case(9, n, d, cap)
+    want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
+    got = _shard_stitch(bufs, mus, keys, p, cap, d, nshards)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------- #
+# Pallas shard-view kernel (interpret) == ref shard decode.
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("d,nshards", ((1000, 2), (4103, 8), (1 << 13, 8)))
+@pytest.mark.parametrize("p", (0.0625, 0.9))
+def test_shard_kernel_interpret_equals_sequential(d, nshards, p):
+    n = 4
+    cap = max(1, int(d * p * 1.1))
+    bufs, mus, keys = _case(d, n, d, cap)
+    want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
+    got = _shard_stitch(bufs, mus, keys, p, cap, d, nshards,
+                        force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_shard_kernel_interpret_single_shard_is_full_decode():
+    d, n, p = 2000, 3, 0.3
+    cap = max(1, int(d * p * 1.2))
+    bufs, mus, keys = _case(21, n, d, cap)
+    want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
+    got = _shard_stitch(bufs, mus, keys, p, cap, d, 1, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------- #
+# Hypothesis layer (optional): widens the sweep when available.
+# --------------------------------------------------------------------------- #
+
+if HAS_HYPOTHESIS:
+    SET = settings(max_examples=20, deadline=None)
+
+    @SET
+    @given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 3000),
+           n=st.sampled_from((1, 2, 8)),
+           p=st.floats(0.05, 1.0),
+           cap_frac=st.sampled_from((0.05, 0.5, 1.2)))
+    def test_hyp_tiled_decode_sum_equals_sequential(seed, d, n, p, cap_frac):
+        cap = max(1, int(d * cap_frac))
+        bufs, mus, keys = _case(seed, n, d, cap)
+        want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
+        got = ref.decode_sum(bufs, mus, keys, p, cap, d)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @SET
+    @given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 3000),
+           n=st.sampled_from((1, 2, 8)),
+           nshards=st.sampled_from((1, 2, 3, 8)),
+           p=st.floats(0.05, 1.0),
+           cap_frac=st.sampled_from((0.05, 0.5, 1.2)))
+    def test_hyp_shard_stitch_equals_sequential(seed, d, n, nshards, p,
+                                                cap_frac):
+        cap = max(1, int(d * cap_frac))
+        bufs, mus, keys = _case(seed, n, d, cap)
+        want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
+        got = _shard_stitch(bufs, mus, keys, p, cap, d, nshards)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -94,9 +94,16 @@ def test_inner_axes_must_be_disjoint_from_axes():
         dataclasses.replace(_cfg("fixed_k"), inner_axes=("pod", "data"))
 
 
-def test_scatter_decode_needs_inner_axes():
-    with pytest.raises(ValueError, match="inner_axes"):
-        dataclasses.replace(_cfg("fixed_k"), inner_axes=())
+def test_scatter_decode_flat_resolves_for_linear_codecs():
+    # §12: flat (single-axis) scatter is legal for coordinate-partitionable
+    # codecs — the decode shards over cfg.axes itself.
+    for kind in ("fixed_k", "bernoulli"):
+        flat = dataclasses.replace(_cfg(kind), inner_axes=())
+        codec = wire.resolve(flat)
+        assert codec.scatter_supported
+        assert wire.scatter_axes(flat) == ("pod",)
+    # hier configs still shard over the inner axes
+    assert wire.scatter_axes(_cfg("fixed_k")) == ("data",)
 
 
 def test_resolve_rejects_scatter_for_nonlinear_codec():

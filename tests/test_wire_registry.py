@@ -154,6 +154,46 @@ def test_hierarchical_cost_is_billed_at_effective_nodes():
         assert 2 * got == comm_cost.cost_config(flat, n=N, d=D)
 
 
+def test_flat_scatter_cost_adds_scatter_bits():
+    """§12 accounting identity: a flat-scatter config bills its wire
+    payload + seeds + the two extra main-axis collectives (scatter_bits);
+    hierarchical scatter bills 0 scatter (free inner link, §11)."""
+    for kind in ("bernoulli", "fixed_k"):
+        cfg = dataclasses.replace(CODEC_CFGS[kind], scatter_decode=True)
+        codec = wire.resolve(cfg)
+        sb = codec.scatter_bits(N, D, cfg)
+        assert sb > 0
+        if kind == "bernoulli":
+            # i32 rank-offset counts + the decoded f32 shard gather
+            assert sb == N * N * 32 + N * -(-D // N) * 32
+        got = comm_cost.cost_config(cfg, n=N, d=D)
+        assert got == (codec.wire_bits(N, D, cfg) + codec.seed_bits(N, cfg)
+                       + sb)
+        # scatter costs MORE than the plain flat config — never hidden.
+        flat = dataclasses.replace(cfg, scatter_decode=False)
+        assert got == comm_cost.cost_config(flat, n=N, d=D) + sb
+        # hierarchical scatter: same codec, 0 scatter bill.
+        hier = dataclasses.replace(cfg, axes=("pod",), inner_axes=("data",))
+        assert wire.resolve(hier).scatter_bits(4, D, hier) == 0.0
+
+
+def test_flat_scatter_preset_identity_holds():
+    """The shipped flat-scatter presets satisfy the full §12 identity and
+    EF delegates scatter_bits verbatim (residuals are local)."""
+    for name in ("bernoulli_seed_1bit", "ef_bernoulli"):
+        cfg = cfg_registry.compression_preset(name, axes=("data",))
+        assert cfg.scatter_decode and not cfg.inner_axes
+        codec = wire.resolve(cfg)
+        assert comm_cost.cost_config(cfg, n=N, d=D) == (
+            codec.wire_bits(N, D, cfg) + codec.seed_bits(N, cfg)
+            + codec.scatter_bits(N, D, cfg))
+    plain = cfg_registry.compression_preset("bernoulli_seed_1bit",
+                                            axes=("data",))
+    ef = cfg_registry.compression_preset("ef_bernoulli", axes=("data",))
+    assert wire.resolve(ef).scatter_bits(N, D, ef) == \
+        wire.resolve(plain).scatter_bits(N, D, plain)
+
+
 def test_hier_presets_resolve_and_flatten():
     for name in ("hier_fixed_k", "hier_bernoulli"):
         cfg = cfg_registry.compression_preset(name)

@@ -36,8 +36,12 @@ SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap", "device_step",
 PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
 DEVICE_STEP_REQUIRED = {"pack_us", "decode_us", "unpack_us", "wire_us",
                         "modeled_us", "row_bytes", "decode_stages"}
-DECODE_STAGES_REQUIRED = {"regenerate_us", "accumulate_us", "shard_gather_us"}
-# node counts the Bernoulli full-vs-shard decode sweep must cover.
+# every flat-scatter breakdown has the accumulate + modeled-gather stages;
+# the per-device prep stage is regenerate_us (bernoulli seed trick) or
+# unpack_us (§13 bit-plane windows) — fixed_k's analytic window has none.
+DECODE_STAGES_REQUIRED = {"accumulate_us", "shard_gather_us"}
+# codecs + node counts the full-vs-shard decode sweep must cover.
+DECODE_SWEEP_CODECS = {"bernoulli", "binary"}
 DECODE_SWEEP_NS = {"2", "8"}
 OVERLAP_REQUIRED = {"overlap_us", "post_us", "overlap_launches",
                     "post_launches", "buckets", "schedule"}
@@ -92,15 +96,21 @@ def validate_schema(res: dict) -> list:
                 DECODE_STAGES_REQUIRED - set(e["decode_stages"]):
             bad.append(f"device_step {name}: decode_stages missing "
                        f"{sorted(DECODE_STAGES_REQUIRED - set(e['decode_stages']))}")
-    sweep_ns = ds.get("decode_n_sweep", {}).get("ns", {})
-    missing_sw = DECODE_SWEEP_NS - set(sweep_ns)
-    if missing_sw:
-        bad.append(f"device_step.decode_n_sweep: missing node counts "
-                   f"{sorted(missing_sw)}")
-    for n, e in sweep_ns.items():
-        if not (e.get("full_us", 0) > 0 and e.get("shard_us", 0) > 0):
-            bad.append(f"device_step.decode_n_sweep n={n}: "
-                       f"non-positive measurements {e}")
+    sweep_codecs = ds.get("decode_n_sweep", {}).get("codecs", {})
+    missing_sc = DECODE_SWEEP_CODECS - set(sweep_codecs)
+    if missing_sc:
+        bad.append(f"device_step.decode_n_sweep: missing codecs "
+                   f"{sorted(missing_sc)}")
+    for cname, rec in sweep_codecs.items():
+        sweep_ns = rec.get("ns", {})
+        missing_sw = DECODE_SWEEP_NS - set(sweep_ns)
+        if missing_sw:
+            bad.append(f"device_step.decode_n_sweep {cname}: missing node "
+                       f"counts {sorted(missing_sw)}")
+        for n, e in sweep_ns.items():
+            if not (e.get("full_us", 0) > 0 and e.get("shard_us", 0) > 0):
+                bad.append(f"device_step.decode_n_sweep {cname} n={n}: "
+                           f"non-positive measurements {e}")
     sweep = res.get("node_sweep", {})
     missing_ns = CORE_NODE_COUNTS - set(sweep)
     if missing_ns:

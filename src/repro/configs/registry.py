@@ -70,14 +70,19 @@ COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
                                        center="mean"),
         mode="gather_decode", axes=("pod",), scatter_decode=True),
     # §4.5 Eq. (11): packed 1-bit sign plane + (vmin, vmax) tail.
+    # Word-aligned flat scatter decode (docs/DESIGN.md §13): shard
+    # boundaries snap to uint32 word boundaries of the packed plane, each
+    # node unpack+accumulates only its word window of all n rows (fused
+    # kernel), and the decoded-shard all_gather is billed via scatter_bits.
     "binary_packed": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="binary", center="min"),
-        mode="gather_decode", axes=("pod",)),
-    # §7.1 Eq. (21): packed 2-bit plane, 1/16 pass-through mass.
+        mode="gather_decode", axes=("pod",), scatter_decode=True),
+    # §7.1 Eq. (21): packed 2-bit plane, 1/16 pass-through mass; §13
+    # scatter decode with the per-shard pass-through-count exchange.
     "ternary_packed": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
                                        center="min"),
-        mode="gather_decode", axes=("pod",)),
+        mode="gather_decode", axes=("pod",), scatter_decode=True),
     # §7.2: seeded per-bucket Hadamard rotation composed onto the packed
     # 1-bit plane (Suresh et al.'s rotated one-bit estimator / DRIVE's
     # backbone) — payload identical to binary_packed at power-of-two
@@ -113,19 +118,26 @@ COMPRESSION_PRESETS: Dict[str, core_types.CompressionConfig] = {
                                        center="mean"),
         mode="gather_decode", axes=("pod",), error_feedback=True,
         scatter_decode=True),
+    # §13 word-aligned scatter decode via EF's delegation to the plane
+    # codecs (same collectives as the EF-free presets).
     "ef_binary": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="binary", center="min"),
-        mode="gather_decode", axes=("pod",), error_feedback=True),
+        mode="gather_decode", axes=("pod",), error_feedback=True,
+        scatter_decode=True),
     "ef_ternary": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
                                        center="min"),
-        mode="gather_decode", axes=("pod",), error_feedback=True),
+        mode="gather_decode", axes=("pod",), error_feedback=True,
+        scatter_decode=True),
     # EF ∘ rotation ∘ binary — the DRIVE-style stack: rotate, 1-bit
     # quantize, recycle the residual (EF outermost; docs/DESIGN.md §8).
+    # Scatter decode runs in ROTATED space at the padded length (§13);
+    # one inverse FWHT after the reassembling all_gather.
     "ef_rotated_binary": core_types.CompressionConfig(
         encoder=core_types.EncoderSpec(kind="binary", center="min",
                                        rotation=True),
-        mode="gather_decode", axes=("pod",), error_feedback=True),
+        mode="gather_decode", axes=("pod",), error_feedback=True,
+        scatter_decode=True),
     # Hierarchical two-level presets (docs/DESIGN.md §11): exact pmean
     # inside the host ("data") axis, compressed codec only across the
     # "pod" axis, reduce-scatter decode sharded over the inner group.
@@ -150,13 +162,15 @@ def compression_preset(name: str,
     """Resolve a named preset, optionally re-pointing its mesh axes.
 
     Re-pointing onto an axis a hierarchical preset uses as an inner axis
-    flattens the hierarchy: the colliding inner axes are dropped (and
-    ``scatter_decode`` with them, when none remain), so e.g. the ``hier_*``
-    presets degrade to their plain flat codec on a single-axis mesh —
-    every all-preset enumeration (benchmarks, golden wire matrix,
-    distributed checks) keeps working unchanged.  A preset that was flat
-    to begin with keeps its ``scatter_decode`` — the flat-mesh scatter
-    (DESIGN.md §12) shards over the re-pointed axes themselves.
+    flattens the hierarchy: the colliding inner axes are dropped, so e.g.
+    the ``hier_*`` presets degrade to their plain flat codec on a
+    single-axis mesh — every all-preset enumeration (benchmarks, golden
+    wire matrix, distributed checks) keeps working unchanged.
+    ``scatter_decode`` survives the flattening: the scatter decomposition
+    simply re-targets the flat-mesh form (DESIGN.md §12), sharding over
+    the re-pointed axes themselves with the shard collectives billed via
+    ``scatter_bits`` — so a flattened ``hier_bernoulli`` keeps the sharded
+    decode instead of falling back to the O(n·d) flat unpack.
     """
     if name not in COMPRESSION_PRESETS:
         raise KeyError(f"unknown compression preset {name!r}; "
@@ -165,10 +179,7 @@ def compression_preset(name: str,
     if axes is None:
         return cfg
     inner = tuple(a for a in cfg.inner_axes if a not in axes)
-    return dataclasses.replace(
-        cfg, axes=axes, inner_axes=inner,
-        scatter_decode=cfg.scatter_decode
-        and (bool(inner) == bool(cfg.inner_axes)))
+    return dataclasses.replace(cfg, axes=axes, inner_axes=inner)
 
 
 def get_run_config(arch: str, shape: str, *, multi_pod: bool = False,

@@ -252,3 +252,101 @@ def ternary_unpack(buf, d: int, cap: int, wire_dtype):
     return jnp.where(sym == 0, c[0],
                      jnp.where(sym == 1, c[1],
                                jnp.where(valid, v, fallback)))
+
+
+# --------------------------------------------------------------------------- #
+# Word-aligned shard decode (reduce-scatter decode, DESIGN.md §13).
+#
+# Shard boundaries snap to uint32 word boundaries (wire.scatter_shard_len
+# with the alignments below), so each node touches only a contiguous word
+# range of every peer's packed plane — never splitting a word across nodes.
+# All helpers fold peers in ascending order, reproducing the sequential
+# flat decode's per-coordinate f32 add chain bit-for-bit.
+# --------------------------------------------------------------------------- #
+
+BINARY_ALIGN = WORD           # 1-bit plane: 32 coordinates per uint32 word
+TERNARY_ALIGN = WORD // 2     # 2-bit plane: 16 coordinates per uint32 word
+
+
+def _plane_window(plane, nshards: int, ws: int, w0):
+    """(n, pw) plane words -> the (n, ws) word window starting at word w0.
+
+    Pads to the full nshards*ws aligned extent first, so the traced-offset
+    dynamic_slice never clamps; pad words are zero (== symbol 0), matching
+    the zero padding pack_bits applies inside the last real word.
+    """
+    n, pw = plane.shape
+    plane = jnp.pad(plane, ((0, 0), (0, nshards * ws - pw)))
+    return jax.lax.dynamic_slice(plane, (0, w0), (n, ws))
+
+
+def binary_decode_shard(rows, d: int, wire_dtype, start, ds: int,
+                        nshards: int, *, force_pallas: bool = False):
+    """Sum of all peers' binary Y_i over coordinates [start, start+ds).
+
+    The collective-free per-node work of the §13 scatter decode: one pass
+    over the n×(ds/32) word window folding every peer into a single (ds,)
+    f32 accumulator (fused kernel: repro.kernels.bitplane.ops.binary_accum)
+    — bit-for-bit the [start:start+ds) slice of Σ_i binary_unpack(rows[i]),
+    zeroed past d.  ``ds`` must be 32-aligned
+    (wire.scatter_shard_len(d, nshards, BINARY_ALIGN)).
+    """
+    pw = bp_ops.num_words(d, 1)
+    ws = ds // WORD
+    win = _plane_window(rows[:, :pw], nshards, ws, start // WORD)
+    c = jax.vmap(lambda tail: words_to_floats(tail, 2, wire_dtype))(
+        rows[:, pw:])
+    total = bp_ops.binary_accum(win, c[:, 0], c[:, 1], ds,
+                                force_pallas=force_pallas)
+    return jnp.where(jnp.arange(ds) + start < d, total, 0.0)
+
+
+def ternary_shard_syms(rows, d: int, start, ds: int, nshards: int):
+    """Every peer's 2-bit symbols over coordinates [start, start+ds).
+
+    Returns (n, ds) uint32; symbols past d are 0 (plane zero padding), so
+    per-shard pass-through counts need no extra masking.  ``ds`` must be
+    16-aligned (wire.scatter_shard_len(d, nshards, TERNARY_ALIGN)).
+    """
+    pw = bp_ops.num_words(d, 2)
+    per = TERNARY_ALIGN
+    ws = ds // per
+    win = _plane_window(rows[:, :pw], nshards, ws, start // per)
+    shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(2)
+    sym = (win[:, :, None] >> shifts[None, None, :]) & jnp.uint32(3)
+    return sym.reshape(rows.shape[0], ds)
+
+
+def ternary_decode_shard(rows, syms, prior, d: int, cap: int, wire_dtype,
+                         start):
+    """Sum of all peers' ternary Y_i over this shard's coordinate window.
+
+    ``syms`` is the (n, ds) window from :func:`ternary_shard_syms`;
+    ``prior`` is (n,) int32 — each peer's pass-through count over all
+    coordinates BEFORE ``start`` (from the per-shard counts all_gather +
+    exclusive cumsum in TernaryCodec.decode_gathered_shard), which offsets
+    the within-window ranks to the global support-rank positions of the
+    flat decode.  Peers fold in ascending order; result is bit-for-bit the
+    window slice of Σ_i ternary_unpack(rows[i]), zeroed past d.
+    """
+    n, ds = syms.shape
+    pw = bp_ops.num_words(d, 2)
+    vw = float_words(cap, wire_dtype)
+    vals = jax.vmap(lambda r: words_to_floats(r[pw:pw + vw], cap,
+                                              wire_dtype))(rows)
+    c = jax.vmap(lambda r: words_to_floats(r[pw + vw:], 2, wire_dtype))(rows)
+
+    def body(i, acc):
+        sym = syms[i]
+        sent = sym == 2
+        pos = prior[i] + jnp.cumsum(sent.astype(jnp.int32)) - 1
+        valid = sent & (pos < cap)
+        v = vals[i][jnp.clip(pos, 0, cap - 1)]
+        fallback = 0.5 * (c[i, 0] + c[i, 1])
+        y = jnp.where(sym == 0, c[i, 0],
+                      jnp.where(sym == 1, c[i, 1],
+                                jnp.where(valid, v, fallback)))
+        return acc + y
+
+    total = jax.lax.fori_loop(0, n, body, jnp.zeros((ds,), jnp.float32))
+    return jnp.where(jnp.arange(ds) + start < d, total, 0.0)

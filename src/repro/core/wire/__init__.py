@@ -8,7 +8,8 @@ compositions — and is the single dispatch rule consulted by collectives,
 comm_cost, bucketing, configs and benchmarks.
 """
 from repro.core.wire.base import (  # noqa: F401
-    WireCodec, effective_nodes, scatter_axes)
+    WireCodec, effective_nodes, scatter_axes, scatter_shard_len,
+    scatter_word_align)
 from repro.core.wire.ef import EFCodec  # noqa: F401
 from repro.core.wire.registry import (  # noqa: F401
     gather_kind, get, names, register, resolve)

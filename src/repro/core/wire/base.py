@@ -89,6 +89,34 @@ def scatter_axes(cfg: t.CompressionConfig) -> Axes:
     return cfg.inner_axes if cfg.inner_axes else cfg.axes
 
 
+def scatter_shard_len(d: int, nshards: int, align: int = 1) -> int:
+    """Length of one scatter-decode shard: ⌈d/nshards⌉ rounded up to ``align``.
+
+    Word-aligned sharding (DESIGN.md §13): packed bit-plane codecs store
+    ``align`` coordinates per uint32 word (32 for the 1-bit plane, 16 for
+    the ternary 2-bit plane), so shard boundaries snap to word boundaries
+    and each node touches only a contiguous word range of every peer's
+    plane.  Every shard emits exactly this many coordinates (the tail
+    shard zero-padded past d), so the reassembling all_gather concatenates
+    fixed-size parts and truncates to d.
+    """
+    ds = -(-d // nshards)
+    return -(-ds // align) * align
+
+
+def scatter_word_align(cfg: t.CompressionConfig) -> int:
+    """Shard alignment (coordinates per indivisible wire word) for cfg.
+
+    1 for the linear codecs (any split works), 32 for the binary 1-bit
+    plane, 16 for the ternary 2-bit plane; wrappers delegate to their
+    inner codec.  ``scatter_shard_len(d, nshards, scatter_word_align(cfg))``
+    is THE shard split every scatter consumer (decode, accounting,
+    benchmarks, checks) must agree on.
+    """
+    from repro.core.wire import registry
+    return registry.resolve(cfg).scatter_align(cfg)
+
+
 def effective_nodes(cfg: t.CompressionConfig, n: int,
                     mesh_sizes=None) -> int:
     """The codec's effective node count: the cross-host group size.
@@ -180,6 +208,15 @@ class WireCodec:
         traffic is free.  Zero for codecs/configs without flat scatter.
         """
         return 0.0
+
+    def scatter_align(self, cfg: t.CompressionConfig) -> int:
+        """Coordinates per indivisible wire word (shard-split alignment).
+
+        Packed-plane codecs override this (32 for 1-bit, 16 for 2-bit
+        symbols) so :func:`scatter_shard_len` snaps shard boundaries to
+        uint32 word boundaries; wrappers delegate to their inner codec.
+        """
+        return 1
 
     def cost_spec(self, d: int, cfg: t.CompressionConfig):
         """(CommSpec, kwargs) mapping this codec onto comm_cost.cost."""

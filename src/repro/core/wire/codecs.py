@@ -383,6 +383,7 @@ class BinaryCodec(base.WireCodec):
     """
 
     name = "binary"
+    scatter_supported = True
 
     def wire_slots(self, d, cfg):
         return bitplane.binary_wire_words(d, cfg.wire_dtype)
@@ -401,6 +402,30 @@ class BinaryCodec(base.WireCodec):
     def unpack(self, row, peer, key, cfg, d):
         return bitplane.binary_unpack(row, d, cfg.wire_dtype)
 
+    def scatter_align(self, cfg):
+        return bitplane.BINARY_ALIGN
+
+    def decode_gathered_shard(self, rows, key, cfg, d, n, shard, nshards):
+        # reduce-scatter decomposition (DESIGN.md §13): shard boundaries
+        # snap to uint32 word boundaries of the 1-bit plane (32
+        # coords/word), so each node reads only its contiguous word window
+        # of every peer's plane — one fused unpack+center-select+accumulate
+        # pass (kernels/bitplane binary_accum) over the n×(ds/32) window.
+        ds = base.scatter_shard_len(d, nshards, bitplane.BINARY_ALIGN)
+        total = bitplane.binary_decode_shard(rows, d, cfg.wire_dtype,
+                                             shard * ds, ds, nshards)
+        return total / n
+
+    def scatter_bits(self, n, d, cfg):
+        # flat scatter adds ONE collective on the main axes: the decoded
+        # f32 shard all_gather (no bookkeeping exchange — the plane itself
+        # travels, so peers need no rank offsets).  Hierarchical scatter
+        # rides the inner axes and is billed free (§11 convention).
+        if not cfg.scatter_decode or cfg.inner_axes:
+            return 0.0
+        ds = base.scatter_shard_len(d, n, bitplane.BINARY_ALIGN)
+        return float(n * ds * 32)
+
 
 class TernaryCodec(base.WireCodec):
     """gather_decode for the ternary encoder (Eq. (21)) with a 2-bit plane.
@@ -411,6 +436,7 @@ class TernaryCodec(base.WireCodec):
     """
 
     name = "ternary"
+    scatter_supported = True
 
     def _cap(self, d, cfg):
         return comm_cost.bernoulli_capacity(d, float(cfg.encoder.fraction))
@@ -435,6 +461,41 @@ class TernaryCodec(base.WireCodec):
     def unpack(self, row, peer, key, cfg, d):
         return bitplane.ternary_unpack(row, d, self._cap(d, cfg),
                                        cfg.wire_dtype)
+
+    def scatter_align(self, cfg):
+        return bitplane.TERNARY_ALIGN
+
+    def decode_gathered_shard(self, rows, key, cfg, d, n, shard, nshards):
+        # reduce-scatter decomposition (DESIGN.md §13).  Shard boundaries
+        # snap to 2-bit-plane word boundaries (16 coords/word).  Pass-
+        # through value slots are addressed by GLOBAL support rank, so —
+        # exactly like BernoulliCodec — each shard needs every peer's
+        # pass-through count strictly before its window: per-shard counts
+        # are all_gathered over the scatter axes and exclusive-cumsummed
+        # into rank offsets.  Unlike Bernoulli there is no support to
+        # regenerate: the counts come straight from the shard's own symbol
+        # window.
+        ds = base.scatter_shard_len(d, nshards, bitplane.TERNARY_ALIGN)
+        start = shard * ds
+        cap = self._cap(d, cfg)
+        syms = bitplane.ternary_shard_syms(rows, d, start, ds, nshards)
+        counts = jnp.sum((syms == 2).astype(jnp.int32), axis=1)
+        allc = base.gather_nested(
+            counts, base.scatter_axes(cfg)).reshape(nshards, n)
+        prior = jnp.cumsum(allc, axis=0) - allc
+        prior_here = jnp.take(prior, shard, axis=0)
+        total = bitplane.ternary_decode_shard(rows, syms, prior_here, d,
+                                              cap, cfg.wire_dtype, start)
+        return total / n
+
+    def scatter_bits(self, n, d, cfg):
+        # flat scatter adds TWO collectives on the main axes: the
+        # per-shard pass-through counts (n i32 per node — the global rank
+        # offsets) and the decoded f32 shard all_gather.
+        if not cfg.scatter_decode or cfg.inner_axes:
+            return 0.0
+        ds = base.scatter_shard_len(d, n, bitplane.TERNARY_ALIGN)
+        return float(n * n * 32 + n * ds * 32)
 
 
 class TernaryOptCodec(TernaryCodec):

@@ -111,15 +111,42 @@ def _bernoulli_twin(flat, key, rank, cfg):
     return codecs.bernoulli_buffer(flat, key, rank, cfg, scaled=False)
 
 
+def _wire_round(x, wire_dtype):
+    """The exact value a float takes after the floats_to_words →
+    words_to_floats wire round trip: identity at r = 32, round-through-
+    the-wire-dtype at r = 16 (bit-equal to the bitcast pack/unpack pair
+    by construction — both are ``astype(wire_dtype)`` then widen)."""
+    x = jnp.asarray(x, jnp.float32)
+    if bitplane.wire_bits(wire_dtype) == 32:
+        return x
+    return x.astype(wire_dtype).astype(jnp.float32)
+
+
 def _binary_twin(flat, cfg):
-    """Seide 1-bit: mean-threshold plane + the two cluster means as tail."""
+    """Seide 1-bit: mean-threshold plane + the two cluster means as tail.
+
+    Returns (buf, recon) with recon bit-for-bit ``binary_unpack(buf)`` —
+    derived from the twin's own mask + centers through the wire-rounding
+    identity, so the EF residual skips the plane unpack round trip
+    (DESIGN.md §13).
+    """
     c_lo, c_hi, hi = _two_means(flat)
-    return bitplane.binary_words(hi, c_lo, c_hi, cfg.wire_dtype)
+    buf = bitplane.binary_words(hi, c_lo, c_hi, cfg.wire_dtype)
+    recon = jnp.where(hi, _wire_round(c_hi, cfg.wire_dtype),
+                      _wire_round(c_lo, cfg.wire_dtype))
+    return buf, recon
 
 
 def _ternary_twin(flat, cap, cfg):
     """Deterministic ternary: top-cap |v − v̄| pass through exactly, the
-    rest 2-means.  Fills the value segment to capacity — no overflow."""
+    rest 2-means.  Fills the value segment to capacity — no overflow.
+
+    Returns (buf, recon) with recon bit-for-bit ``ternary_unpack(buf)``:
+    the value segment is filled to capacity in support-rank order, so
+    every pass-through slot is valid (the overflow fallback is
+    unreachable) and the reconstruction is just the pass/branch select
+    through the wire rounding — no plane unpack, no rank cumsum.
+    """
     d = flat.shape[0]
     cap = min(cap, d)
     dev = jnp.abs(flat - jnp.mean(flat))
@@ -129,7 +156,12 @@ def _ternary_twin(flat, cap, cfg):
     c_lo, c_hi, hi = _two_means(flat, select=~passm)
     sym = jnp.where(passm, 2, jnp.where(hi, 1, 0)).astype(jnp.uint32)
     vbuf = bitplane.rank_scatter(flat, passm, cap)
-    return bitplane.ternary_words(sym, vbuf, c_lo, c_hi, cfg.wire_dtype)
+    buf = bitplane.ternary_words(sym, vbuf, c_lo, c_hi, cfg.wire_dtype)
+    wd = cfg.wire_dtype
+    recon = jnp.where(passm, _wire_round(flat, wd),
+                      jnp.where(hi, _wire_round(c_hi, wd),
+                                _wire_round(c_lo, wd)))
+    return buf, recon
 
 
 def _dense_twin(flat, key, rank, cfg):
@@ -177,15 +209,63 @@ def _twin_pack(codec, flat, key, rank, cfg):
     if isinstance(codec, codecs.BernoulliCodec):
         return _bernoulli_twin(flat, key, rank, cfg)
     if isinstance(codec, codecs.TernaryCodec):  # incl. TernaryOptCodec
-        return _ternary_twin(flat, codec._cap(flat.shape[0], cfg), cfg)
+        return _ternary_twin(flat, codec._cap(flat.shape[0], cfg), cfg)[0]
     if isinstance(codec, codecs.BinaryCodec):
-        return _binary_twin(flat, cfg)
+        return _binary_twin(flat, cfg)[0]
     if isinstance(codec, codecs.DenseSimCodec):
         return _dense_twin(flat, key, rank, cfg)
     raise ValueError(
         f"error feedback has no contractive twin for codec {codec.name!r}; "
         "define ef_twin_pack/ef_residual_bound on the codec or leave "
         "error_feedback off for it")
+
+
+def _twin_pack_recon(codec, flat, key, rank, cfg):
+    """(wire buffer, local reconstruction) for the contractive twin.
+
+    ``recon`` is bit-for-bit ``codec.unpack(buf, rank, key, cfg, d)``.
+    For the plane codecs it is derived from the twin's own intermediates
+    (mask + centers + pass values through :func:`_wire_round`) — skipping
+    the plane unpack round trip that was the ef_rotated_binary hot spot —
+    and the rotated wrapper recurses in rotated space with ONE inverse
+    FWHT at the end.  Codecs without a fused twin recon fall back to
+    pack + unpack, the historical op sequence.  Residual semantics are
+    unchanged either way (golden wire bytes depend on the round-t residual
+    and stay pinned).
+    """
+    hook = getattr(codec, "ef_twin_pack", None)
+    if hook is not None:
+        buf = hook(flat, key, rank, cfg)
+        return buf, codec.unpack(buf, rank, key, cfg, flat.shape[0])
+    if isinstance(codec, rotated.RotatedCodec):
+        krot = rotation.rotation_key(key)
+        z = rotation.rotate(krot, flat)
+        buf, rz = _twin_pack_recon(codec.inner, z, key, rank, cfg)
+        return buf, rotation.unrotate(krot, rz, flat.shape[0])
+    if isinstance(codec, codecs.TernaryCodec):  # incl. TernaryOptCodec
+        return _ternary_twin(flat, codec._cap(flat.shape[0], cfg), cfg)
+    if isinstance(codec, codecs.BinaryCodec):
+        return _binary_twin(flat, cfg)
+    buf = _twin_pack(codec, flat, key, rank, cfg)
+    return buf, codec.unpack(buf, rank, key, cfg, flat.shape[0])
+
+
+def twin_recon_fused(codec) -> bool:
+    """True iff the EF twin for inner ``codec`` derives its reconstruction
+    from encode-side intermediates (no plane unpack round trip)."""
+    if isinstance(codec, rotated.RotatedCodec):
+        return twin_recon_fused(codec.inner)
+    return isinstance(codec, (codecs.BinaryCodec, codecs.TernaryCodec))
+
+
+def twin_recon(codec, flat, key, rank, cfg):
+    """The EF residual reconstruction m(v) for inner ``codec``.
+
+    Bench/test entry point for the production residual path: bit-equal to
+    ``codec.unpack`` of the shipped twin buffer (pinned by
+    tests/test_wire_registry.py), collective-free.
+    """
+    return _twin_pack_recon(codec, flat, key, rank, cfg)[1]
 
 
 def _twin_bound(codec, flat, key, cfg):
@@ -275,6 +355,18 @@ class EFCodec(base.WireCodec):
     def decode_reduced(self, wire, key, cfg, d):
         return self.inner.decode_reduced(wire, key, cfg, d)
 
+    def scatter_align(self, cfg):
+        return self.inner.scatter_align(cfg)
+
+    def gather_decode(self, buf, key, cfg, d, n):
+        # full delegation (not just the decode hooks): RotatedCodec owns
+        # its scatter decomposition inside gather_decode — shards live in
+        # rotated space at the padded length — so EF hands the whole
+        # gather+decode to the inner codec instead of re-running base's
+        # scatter branch at the model d.  For non-rotated inners this is
+        # op-for-op the base implementation.
+        return self.inner.gather_decode(buf, key, cfg, d, n)
+
     # ---- the stateful round ----------------------------------------------- #
 
     def state_shape(self, d, cfg):
@@ -290,9 +382,12 @@ class EFCodec(base.WireCodec):
     def _round_stateful(self, flat, state, key, cfg):
         """One EF round: (estimate, new_residual); must run in shard_map.
 
-        The new residual is v minus the inner codec's ``unpack`` of the
-        bytes this node actually shipped, so wire-dtype rounding and
-        capacity-overflow drops are recycled too, not just sparsification.
+        The new residual is v minus the reconstruction of the bytes this
+        node actually shipped (bit-equal to the inner codec's ``unpack``
+        of them, but derived from the twin's own intermediates where the
+        format allows — :func:`_twin_pack_recon`), so wire-dtype rounding
+        and capacity-overflow drops are recycled too, not just
+        sparsification.
         Under the hierarchical schedule ``flat`` arrives already
         inner-reduced (base.mean_flat*), so the residual tracks the
         cross-host message — the only lossy step.
@@ -300,13 +395,12 @@ class EFCodec(base.WireCodec):
         d = flat.shape[0]
         rank, n = base.axis_rank_size(cfg.axes)
         v = flat + state
-        buf = self.pack(v, key, rank, cfg)
+        buf, recon = _twin_pack_recon(self.inner, v, key, rank, cfg)
         if self.reduce == "psum":
             wire = jax.lax.pmean(buf, cfg.axes)
             est = self.inner.decode_reduced(wire, key, cfg, d)
         else:
             est = self.gather_decode(buf, key, cfg, d, n)
-        recon = self.inner.unpack(buf, rank, key, cfg, d)
         return est, v - recon
 
     def _round(self, flat, key, cfg):

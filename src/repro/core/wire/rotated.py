@@ -104,6 +104,22 @@ class RotatedCodec(base.WireCodec):
         zbar = self.inner.decode_gathered(rows, key, cfg, dp, n)
         return rotation.unrotate(rotation.rotation_key(key), zbar, d)
 
+    def scatter_align(self, cfg):
+        return self.inner.scatter_align(cfg)
+
+    def gather_decode(self, buf, key, cfg, d, n):
+        # Rotated decodes scatter in ROTATED space (DESIGN.md §13): the
+        # unrotated estimate is not coordinate-partitionable (every output
+        # coordinate mixes all of z̄), so the shard decomposition — shard
+        # decode, reassembling all_gather, truncation — runs entirely
+        # inside the inner codec at the padded length, and the single
+        # inverse rotation is applied to the reassembled z̄.  Flat-decode
+        # configs take the exact historical op sequence through the same
+        # delegation.
+        dp = rotation.padded_dim(d)
+        zbar = self.inner.gather_decode(buf, key, cfg, dp, n)
+        return rotation.unrotate(rotation.rotation_key(key), zbar, d)
+
     def decode_reduced(self, wire, key, cfg, d):
         dp = rotation.padded_dim(d)
         zbar = self.inner.decode_reduced(wire, key, cfg, dp)

@@ -21,6 +21,7 @@ from jax.experimental import pallas as pl
 LANES = 128
 BM_PACK = 256    # (256, 128) u32 in -> (256, 128*w/32) u32 out
 BM_UNPACK = 8    # (8, 128) u32 words in -> (8, 128*32/w) u32 out
+BM_ACCUM = 8     # (n, 8, 128) u32 words -> (8, 128*32) f32 accumulator
 
 
 def _pack_kernel(width, v_ref, o_ref):
@@ -57,6 +58,46 @@ def pack_bits_2d(vals, width: int, *, interpret: bool = False):
         out_shape=jax.ShapeDtypeStruct((r, out_lanes), jnp.uint32),
         interpret=interpret,
     )(vals)
+
+
+def _accum_kernel(n, w_ref, c_ref, o_ref):
+    per = 32
+    bm = o_ref.shape[0]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, per), 2)
+
+    def body(i, acc):
+        w = w_ref[i]                                     # (BM, LANES) u32
+        bits = (w[:, :, None] >> shifts) & jnp.uint32(1)
+        sel = bits.reshape(bm, -1) > 0
+        return acc + jnp.where(sel, c_ref[i, 1], c_ref[i, 0])
+
+    o_ref[...] = jax.lax.fori_loop(0, n, body,
+                                   jnp.zeros(o_ref.shape, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def binary_accum_2d(words, centers, *, interpret: bool = False):
+    """Fused unpack + center-select + peer accumulate (scatter decode §13).
+
+    words: (n, R, 128) uint32 1-bit plane windows, R % BM_ACCUM == 0;
+    centers: (n, 128) f32 with lane 0 = c_lo, lane 1 = c_hi per peer.
+    One pass over the n×window word range folds every peer into a single
+    (R, 128*32) f32 accumulator — peers added in ascending order, so the
+    result matches the ref.binary_accum oracle (and the sequential flat
+    decode) bit-for-bit.
+    """
+    n, r, c = words.shape
+    assert c == LANES and r % BM_ACCUM == 0, (n, r, c)
+    out_lanes = LANES * 32
+    return pl.pallas_call(
+        functools.partial(_accum_kernel, n),
+        grid=(r // BM_ACCUM,),
+        in_specs=[pl.BlockSpec((n, BM_ACCUM, LANES), lambda i: (0, i, 0)),
+                  pl.BlockSpec((n, LANES), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((BM_ACCUM, out_lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, out_lanes), jnp.float32),
+        interpret=interpret,
+    )(words, centers)
 
 
 @functools.partial(jax.jit, static_argnames=("width", "interpret"))

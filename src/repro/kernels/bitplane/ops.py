@@ -51,3 +51,23 @@ def unpack_bits(words, width: int, d: int, *, force_pallas: bool = False):
     vals = _kernel.unpack_bits_2d(flat.reshape(-1, _kernel.LANES), width,
                                   interpret=interpret)
     return vals.reshape(-1)[:d]
+
+
+def binary_accum(words, c_lo, c_hi, d: int, *, force_pallas: bool = False):
+    """Fold n peers' (n, nw) 1-bit plane windows + per-peer centers into one
+    (d,) f32 peer-linear sum — the fused unpack+accumulate of the §13
+    scatter decode.  Pad words/coordinates beyond d are truncated."""
+    use_pallas, interpret = backend.choose(force_pallas)
+    words = jnp.asarray(words)
+    c_lo = jnp.asarray(c_lo).astype(jnp.float32)
+    c_hi = jnp.asarray(c_hi).astype(jnp.float32)
+    if not use_pallas:
+        return _ref.binary_accum(words, c_lo, c_hi, d)
+    n, nw = words.shape
+    tile = _kernel.BM_ACCUM * _kernel.LANES
+    wp = jnp.pad(words, ((0, 0), (0, (-nw) % tile)))
+    c = jnp.zeros((n, _kernel.LANES), jnp.float32)
+    c = c.at[:, 0].set(c_lo).at[:, 1].set(c_hi)
+    acc = _kernel.binary_accum_2d(wp.reshape(n, -1, _kernel.LANES), c,
+                                  interpret=interpret)
+    return acc.reshape(-1)[:d]

@@ -13,6 +13,7 @@ kernel and this oracle both mask defensively anyway).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 WORD = 32
@@ -48,3 +49,23 @@ def unpack_bits(words, width: int, d: int):
     shifts = jnp.arange(per, dtype=jnp.uint32) * jnp.uint32(width)
     vals = (words.reshape(-1)[:, None] >> shifts) & mask
     return vals.reshape(-1)[:d]
+
+
+def binary_accum(words, c_lo, c_hi, d: int):
+    """Fold n peers' 1-bit plane windows into one (d,) f32 accumulator.
+
+    ``words`` is (n, nw) uint32 — each row one peer's plane window covering
+    ``d`` symbols; ``c_lo``/``c_hi`` are (n,) f32 per-peer centers.
+    Returns ``Σ_i where(bit_ij, c_hi[i], c_lo[i])`` with peers folded in
+    ascending order — the exact per-coordinate f32 add chain of the
+    sequential flat decode (``acc + unpack(row_i)`` in
+    ``WireCodec.decode_gathered``), so sharded and flat binary decodes
+    agree bit-for-bit.  This is the oracle for the fused Pallas
+    unpack+accumulate kernel (bitplane.binary_accum_2d).
+    """
+    def body(i, acc):
+        bits = unpack_bits(words[i], 1, d)
+        return acc + jnp.where(bits > 0, c_hi[i], c_lo[i])
+
+    return jax.lax.fori_loop(0, words.shape[0], body,
+                             jnp.zeros((d,), jnp.float32))

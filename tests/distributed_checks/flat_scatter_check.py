@@ -5,17 +5,20 @@ tests/test_decode_scatter.py in a subprocess:
     python flat_scatter_check.py
 
 Checks:
-  * for every linear flat-scatter config (bernoulli — the shipped
-    `bernoulli_seed_1bit` preset — and fixed_k), the scatter-decode mean
+  * for every coordinate-partitionable flat-scatter config (bernoulli —
+    the shipped `bernoulli_seed_1bit` preset — fixed_k, and the §13
+    word-aligned bit-plane pair binary/ternary), the scatter-decode mean
     is BIT-exact vs the no-scatter flat reference across n ∈ {2, 4, 8}:
-    each node decodes only its ⌈d/n⌉ coordinate shard of all n peer rows
-    and one all_gather of decoded shards reassembles the mean;
+    each node decodes only its shard (⌈d/n⌉, word-aligned for the packed
+    planes) of all n peer rows and one all_gather of decoded shards
+    reassembles the mean;
   * per lowered HLO at n = 8: the scatter round launches exactly the
-    expected extra all-gathers on top of the wire-row gather (bernoulli:
-    i32 rank-offset counts + decoded f32 shard; fixed_k: decoded shard
-    only — its dump-row window is analytic), and the total gathered
-    payload bits == codec.wire_bits + codec.scatter_bits == cost_config −
-    seed_bits — the honest billing of the extra intra-mesh traffic;
+    expected extra all-gathers on top of the wire-row gather (bernoulli /
+    ternary: i32 counts + decoded f32 shard; fixed_k / binary: decoded
+    shard only — their coordinate windows are analytic), and the total
+    gathered payload bits == codec.wire_bits + codec.scatter_bits ==
+    cost_config − seed_bits — the honest billing of the extra intra-mesh
+    traffic;
   * bucketed sync (sync_grads_bucketed) with a flat-scatter config
     launches exactly 3 gathers per compressed bucket and the summed HLO
     gather bits equal Σ bucket_wire_bits(plan, cfg, n) — per-bucket
@@ -58,12 +61,26 @@ def scatter_cfg(kind):
         wire_dtype="float32", min_compress_size=0)
 
 
+def plane_cfg(kind):
+    enc = (types.EncoderSpec(kind="binary", center="min")
+           if kind == "binary" else
+           types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
+                             center="min"))
+    return types.CompressionConfig(
+        encoder=enc, mode="gather_decode", axes=("data",),
+        scatter_decode=True, wire_dtype="float32", min_compress_size=0)
+
+
 # extra all-gathers the scatter round adds on top of the wire-row gather:
-# bernoulli ships the i32 rank-offset counts + the decoded shard; fixed_k's
-# dump-row window is analytic, so only the decoded shard travels.
+# bernoulli ships the i32 rank-offset counts + the decoded shard, ternary
+# its i32 pass-through counts + the decoded shard; fixed_k's dump-row
+# window and binary's word window are analytic, so only the decoded shard
+# travels.
 PRESETS = {
     "bernoulli": (scatter_cfg("bernoulli"), 2),
     "fixed_k": (scatter_cfg("fixed_k"), 1),
+    "binary": (plane_cfg("binary"), 1),
+    "ternary": (plane_cfg("ternary"), 2),
 }
 
 
@@ -106,12 +123,14 @@ for name, (cfg, _) in PRESETS.items():
               np.array_equal(y_sc, y_fl),
               f"max|diff|={np.max(np.abs(y_sc - y_fl)):.2e}")
 
-# the shipped preset engages the flat scatter path out of the box
-preset = dataclasses.replace(
-    cfg_registry.compression_preset("bernoulli_seed_1bit", axes=("data",)),
-    wire_dtype="float32", min_compress_size=0)
-check("preset.bernoulli_seed_1bit_is_flat_scatter",
-      preset.scatter_decode and not preset.inner_axes, f"{preset.mode}")
+# the shipped presets engage the flat scatter path out of the box
+for pname in ("bernoulli_seed_1bit", "binary_packed", "ternary_packed",
+              "ef_binary", "ef_ternary", "ef_rotated_binary"):
+    preset = dataclasses.replace(
+        cfg_registry.compression_preset(pname, axes=("data",)),
+        wire_dtype="float32", min_compress_size=0)
+    check(f"preset.{pname}_is_flat_scatter",
+          preset.scatter_decode and not preset.inner_axes, f"{preset.mode}")
 
 # ---- HLO: 3 gathers, payload == wire_bits + scatter_bits --------------------
 N = 8

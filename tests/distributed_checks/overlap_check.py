@@ -11,8 +11,10 @@ Checks (ISSUE 5 acceptance):
     and the stateful DRIVE stack (ef_rotated_binary), whose per-bucket EF
     residuals must also match bit-for-bit across 3 chained steps even
     though buckets complete out of backward order;
-  * HLO: one collective launch per bucket (compiled exec counts), and at
-    the dependency level the per-bucket collectives *interleave* with
+  * HLO: the expected collective launches per bucket (compiled exec
+    counts — 1 for psum/exact buckets, 2 for flat-scatter buckets whose
+    decode re-gathers the decoded shards, DESIGN.md §13), and at the
+    dependency level the per-bucket collectives *interleave* with
     backward — the first-ready bucket's collective is independent of the
     trailing backward dots (neither ancestor nor descendant), so it can be
     issued before the final backward op instead of after the loss graph;
@@ -180,23 +182,33 @@ def interleave_stats(ovl, ef0):
     return colls, dots, indep
 
 
+# Extra collectives per *compressed* bucket beyond the one wire gather /
+# psum: ef_rotated_binary flat-scatters (§13) so each compressed bucket
+# re-gathers its decoded shard — one extra all-gather (the binary family
+# needs no counts exchange).  fixed_k_1bit is a single psum.
+EXTRA_COLLS = {"fixed_k_1bit": 0, "ef_rotated_binary": 1}
+
 for preset in ["fixed_k_1bit", "ef_rotated_binary"]:
     cfg = oh.mkcfg(preset, M)
     plan = bucketing.build_plan(SHAPES, SPECS, MESH_AXES, MSIZES, cfg)
     use_ef = cfg.error_feedback
+    n_expect = sum(1 + (EXTRA_COLLS[preset] if b.kind == "compressed" else 0)
+                   for b in plan.buckets)
 
-    # one collective launch per bucket in the compiled module
+    # the expected collective launches per bucket in the compiled module
     _, ovl = make_steps(cfg, plan)
     ef0 = bucketing.init_ef_state(plan, cfg) if use_ef else {}
     comp_txt = ovl.lower(PARAMS, ef0, X,
                          jax.random.PRNGKey(7)).compile().as_text()
     n_launch = sum(hlo_cost.analyze_text(comp_txt).coll_exec.values())
-    check(f"{preset}.launch_per_bucket", n_launch == len(plan.buckets),
-          f"launches={n_launch} buckets={len(plan.buckets)}")
+    check(f"{preset}.launch_per_bucket", n_launch == n_expect,
+          f"launches={n_launch} expected={n_expect} "
+          f"buckets={len(plan.buckets)}")
 
     colls, dots, indep = interleave_stats(ovl, ef0)
-    check(f"{preset}.coll_count", len(colls) == len(plan.buckets),
-          f"{len(colls)} collectives for {len(plan.buckets)} buckets")
+    check(f"{preset}.coll_count", len(colls) == n_expect,
+          f"{len(colls)} collectives for {len(plan.buckets)} buckets"
+          f" (expected {n_expect})")
     # Interleaved, not trailing: the first-issued (earliest-ready) bucket's
     # collective is independent of part of backward — it does not wait for
     # the final backward op the way a post-loss-graph sync stage would

@@ -1,0 +1,96 @@
+"""Fused unpack+accumulate kernel for the §13 binary scatter decode.
+
+``repro.kernels.bitplane.ops.binary_accum`` folds all n peers' 1-bit plane
+windows + per-peer centers into one (d,) f32 accumulator in a single pass.
+The ref.py oracle pins the peer-linear add chain (ascending-peer fori, the
+exact order of the sequential flat decode); the Pallas kernel (interpret
+mode here, the CI kernel-interpret job points at this file) must match it
+BIT FOR BIT across word-tile padding, partial last words and peer counts.
+
+Deterministic sweeps only — no hypothesis dependence, so the kernel job
+runs the full file unconditionally.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitplane import bitplane as kern
+from repro.kernels.bitplane import ops, ref
+
+TILE = kern.BM_ACCUM * kern.LANES * 32   # coords per padded word tile
+
+
+def _case(seed, n, d):
+    """(words, c_lo, c_hi): arbitrary plane windows + centers."""
+    k = jax.random.PRNGKey(seed)
+    nw = ref.num_words(d, 1)
+    words = jax.random.bits(jax.random.fold_in(k, 0), (n, nw),
+                            dtype=jnp.uint32)
+    # zero the pad bits of the last word: real planes come from pack_bits,
+    # which zero-pads, and the shard window contract relies on it
+    tail = d % 32
+    if tail:
+        mask = jnp.uint32((1 << tail) - 1)
+        words = words.at[:, -1].set(words[:, -1] & mask)
+    c_lo = jax.random.normal(jax.random.fold_in(k, 1), (n,)) * 0.5
+    c_hi = c_lo + jnp.abs(jax.random.normal(jax.random.fold_in(k, 2), (n,)))
+    return words, c_lo, c_hi
+
+
+def _sequential(words, c_lo, c_hi, d):
+    """Python-loop gold: the flat decode's acc + where(bit, hi, lo) chain."""
+    acc = jnp.zeros((d,), jnp.float32)
+    for i in range(words.shape[0]):
+        bits = ref.unpack_bits(words[i], 1, d)
+        acc = acc + jnp.where(bits > 0, c_hi[i], c_lo[i])
+    return acc
+
+
+# d crosses: single partial word, exact word, exact kernel tile (no pad),
+# multi-tile with remainder, sub-tile with remainder.
+CASES = ((1, 1), (31, 2), (32, 1), (33, 4), (1000, 3), (4103, 8),
+         (TILE, 2), (TILE + 40, 4))
+
+
+@pytest.mark.parametrize("d,n", CASES)
+def test_ref_accum_equals_sequential(d, n):
+    words, c_lo, c_hi = _case(d + n, n, d)
+    want = _sequential(words, c_lo, c_hi, d)
+    got = ref.binary_accum(words, c_lo, c_hi, d)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("d,n", CASES)
+def test_pallas_accum_interpret_equals_ref(d, n):
+    words, c_lo, c_hi = _case(d, n, d)
+    want = ref.binary_accum(words, c_lo, c_hi, d)
+    got = ops.binary_accum(words, c_lo, c_hi, d, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pallas_accum_kernel_direct_no_padding():
+    """The 2D kernel entry at an exact (BM_ACCUM, LANES) word tiling —
+    exercises the grid path with zero host-side padding."""
+    n, r = 3, 2 * kern.BM_ACCUM
+    d = r * kern.LANES * 32
+    words, c_lo, c_hi = _case(5, n, d)
+    c = jnp.zeros((n, kern.LANES), jnp.float32)
+    c = c.at[:, 0].set(c_lo).at[:, 1].set(c_hi)
+    got = kern.binary_accum_2d(words.reshape(n, r, kern.LANES), c,
+                               interpret=True)
+    want = ref.binary_accum(words, c_lo, c_hi, d)
+    np.testing.assert_array_equal(np.asarray(got).reshape(-1),
+                                  np.asarray(want))
+
+
+def test_accum_matches_unpack_centers_semantics():
+    """bit=1 selects c_hi, bit=0 selects c_lo — pinned with a one-peer
+    alternating plane so a swapped select cannot cancel across peers."""
+    d = 64
+    bits = jnp.arange(d, dtype=jnp.uint32) % 2
+    words = ref.pack_bits(bits, 1).reshape(1, -1)
+    got = np.asarray(ops.binary_accum(words, jnp.array([-2.0]),
+                                      jnp.array([3.0]), d))
+    want = np.where(np.arange(d) % 2 == 1, 3.0, -2.0).astype(np.float32)
+    np.testing.assert_array_equal(got, want)

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import bitplane, comm_cost
+from repro.core.wire import scatter_shard_len
 from repro.kernels.bernoulli_wire import ops, ref
 
 try:
@@ -168,6 +170,112 @@ def test_shard_kernel_interpret_single_shard_is_full_decode():
     bufs, mus, keys = _case(21, n, d, cap)
     want = ref.decode_sum_sequential(bufs, mus, keys, p, cap, d)
     got = _shard_stitch(bufs, mus, keys, p, cap, d, 1, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------- #
+# §13 word-aligned bit-plane shard decode: stitched shards == flat unpack.
+#
+# Real roundtripped wire rows (unlike the Bernoulli decode-only cases
+# above: the plane layout IS the contract under test — the word windows,
+# the center tail past the plane, and for ternary the rank positions the
+# pass-through counts offset across shard boundaries).
+# --------------------------------------------------------------------------- #
+
+TERN_P = 1.0 / 16
+
+
+def _plane_rows(kind, seed, n, d, wire_dtype, cap=None):
+    k = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(jax.random.fold_in(k, 0), (n, d)) * 0.4
+    pack = (
+        (lambda x, kk: bitplane.binary_pack(x, kk, wire_dtype))
+        if kind == "binary" else
+        (lambda x, kk: bitplane.ternary_pack(x, kk, TERN_P, cap, wire_dtype)))
+    return jnp.stack([pack(xs[i], jax.random.fold_in(k, i + 1))
+                      for i in range(n)])
+
+
+def _binary_stitch(rows, d, nshards, wire_dtype, force_pallas=False):
+    ds = scatter_shard_len(d, nshards, bitplane.BINARY_ALIGN)
+    parts = [bitplane.binary_decode_shard(rows, d, wire_dtype, s * ds, ds,
+                                          nshards, force_pallas=force_pallas)
+             for s in range(nshards)]
+    return jnp.concatenate(parts)[:d]
+
+
+def _ternary_stitch(rows, d, cap, nshards, wire_dtype):
+    ds = scatter_shard_len(d, nshards, bitplane.TERNARY_ALIGN)
+    syms = jnp.stack([bitplane.ternary_shard_syms(rows, d, s * ds, ds,
+                                                  nshards)
+                      for s in range(nshards)])          # (nshards, n, ds)
+    # the per-shard pass-through counts the scatter path all_gathers,
+    # exclusive-cumsum'd into each peer's global rank offset
+    counts = jnp.sum((syms == 2).astype(jnp.int32), axis=2)
+    prior = jnp.cumsum(counts, axis=0) - counts
+    parts = [bitplane.ternary_decode_shard(rows, syms[s], prior[s], d, cap,
+                                           wire_dtype, s * ds)
+             for s in range(nshards)]
+    return jnp.concatenate(parts)[:d]
+
+
+def _flat_sum(kind, rows, d, wire_dtype, cap=None):
+    """Σ_i unpack(rows[i]) in ascending peer order — the flat add chain."""
+    unpack = ((lambda r: bitplane.binary_unpack(r, d, wire_dtype))
+              if kind == "binary" else
+              (lambda r: bitplane.ternary_unpack(r, d, cap, wire_dtype)))
+    acc = jnp.zeros((d,), jnp.float32)
+    for i in range(rows.shape[0]):
+        acc = acc + unpack(rows[i])
+    return acc
+
+
+# d values hit: shards past d entirely (97/8), d not divisible by 32·n,
+# word-boundary-exact d (8192), sub-word tails (33, 4103).
+PLANE_CASES = ((33, 1), (97, 2), (97, 8), (1000, 3), (4103, 8), (1 << 13, 8))
+
+
+@pytest.mark.parametrize("wire_dtype", ("float32", "bfloat16"))
+@pytest.mark.parametrize("d,nshards", PLANE_CASES)
+def test_binary_shard_stitch_equals_flat(d, nshards, wire_dtype):
+    n = 4
+    rows = _plane_rows("binary", d + nshards, n, d, wire_dtype)
+    want = _flat_sum("binary", rows, d, wire_dtype)
+    got = _binary_stitch(rows, d, nshards, wire_dtype)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("wire_dtype", ("float32", "bfloat16"))
+@pytest.mark.parametrize("d,nshards", PLANE_CASES)
+def test_ternary_shard_stitch_equals_flat(d, nshards, wire_dtype):
+    n = 4
+    cap = comm_cost.bernoulli_capacity(d, TERN_P)
+    rows = _plane_rows("ternary", d + nshards, n, d, wire_dtype, cap=cap)
+    want = _flat_sum("ternary", rows, d, wire_dtype, cap=cap)
+    got = _ternary_stitch(rows, d, cap, nshards, wire_dtype)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ternary_stitch_cap_overflow_crosses_shards():
+    """cap far below the pass-through mass: the μ-substitute fallback
+    engages mid-stream and the rank offsets must carry the overflow
+    boundary across shard windows exactly (it lands inside a shard)."""
+    d, n, nshards = 3000, 3, 4
+    cap = 8
+    rows = _plane_rows("ternary", 11, n, d, "float32", cap=cap)
+    want = _flat_sum("ternary", rows, d, "float32", cap=cap)
+    got = _ternary_stitch(rows, d, cap, nshards, "float32")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("d,nshards", ((1000, 2), (4103, 8), (1 << 13, 8)))
+def test_binary_shard_kernel_interpret_equals_flat(d, nshards):
+    """force_pallas routes through the fused unpack+accumulate kernel in
+    interpret mode — same bits as the ref fold."""
+    n = 4
+    rows = _plane_rows("binary", d, n, d, "float32")
+    want = _flat_sum("binary", rows, d, "float32")
+    got = _binary_stitch(rows, d, nshards, "float32", force_pallas=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 

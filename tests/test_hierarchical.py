@@ -106,15 +106,32 @@ def test_scatter_decode_flat_resolves_for_linear_codecs():
     assert wire.scatter_axes(_cfg("fixed_k")) == ("data",)
 
 
-def test_resolve_rejects_scatter_for_nonlinear_codec():
-    # the packed bit-plane decode is not coordinate-partitionable
+def test_scatter_decode_resolves_for_bitplane_codecs():
+    # §13: the packed plane decodes partition too, on word-aligned shards.
     cfg = types.CompressionConfig(
         encoder=types.EncoderSpec(kind="binary", center="min"),
         mode="gather_decode", axes=("pod",), inner_axes=("data",),
         scatter_decode=True)
+    codec = wire.resolve(cfg)
+    assert codec.scatter_supported
+    assert wire.scatter_word_align(cfg) == 32
+    tern = types.CompressionConfig(
+        encoder=types.EncoderSpec(kind="ternary", fraction=1.0 / 16,
+                                  center="min"),
+        mode="gather_decode", axes=("pod",), scatter_decode=True)
+    assert wire.scatter_word_align(tern) == 16
+
+
+def test_resolve_rejects_scatter_for_psum_codec():
+    # psum codecs decode a reduced wire — there are no per-peer rows to
+    # shard, so scatter_decode cannot compose with them.
+    cfg = types.CompressionConfig(
+        encoder=types.EncoderSpec(kind="fixed_k", fraction=1.0 / 16,
+                                  center="mean"),
+        mode="shared_support", axes=("pod",), scatter_decode=True)
     with pytest.raises(ValueError, match="scatter_decode"):
         wire.resolve(cfg)
-    # the two-level schedule WITHOUT scatter is fine for any codec
+    # the same schedule WITHOUT scatter is fine
     wire.resolve(dataclasses.replace(cfg, scatter_decode=False))
 
 

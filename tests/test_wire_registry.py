@@ -98,6 +98,29 @@ def test_ef_wraps_any_codec_without_nesting():
         wire.EFCodec(wire.RotatedCodec(wire.get("ef_binary")))
 
 
+@pytest.mark.parametrize("kind,rot", [("binary", False), ("ternary", False),
+                                      ("binary", True), ("bernoulli", False)])
+@pytest.mark.parametrize("wire_dtype", ["float32", "bfloat16"])
+def test_ef_twin_recon_matches_unpack(kind, rot, wire_dtype):
+    """The fused EF residual reconstruction (derived from the twin's own
+    intermediates, no plane unpack — DESIGN.md §13) is bit-for-bit the
+    inner codec's unpack of the shipped bytes, so residual semantics and
+    the golden wire bytes are unchanged."""
+    from repro.core.wire import ef as ef_mod
+    center = "mean" if kind == "bernoulli" else "min"
+    cfg = _cfg(kind, rotation=rot, center=center, wire=wire_dtype)
+    codec = wire.resolve(cfg)
+    d = 1000
+    key = jax.random.PRNGKey(11)
+    v = jax.random.normal(jax.random.PRNGKey(12), (d,)) * 3.0
+    buf, recon = ef_mod._twin_pack_recon(codec, v, key, 0, cfg)
+    want_buf = ef_mod._twin_pack(codec, v, key, 0, cfg)
+    assert np.array_equal(np.asarray(buf), np.asarray(want_buf))
+    want = codec.unpack(buf, 0, key, cfg, d)
+    assert np.array_equal(np.asarray(recon), np.asarray(want))
+    assert ef_mod.twin_recon_fused(codec) == (kind in ("binary", "ternary"))
+
+
 def test_gather_wire_kind_delegates_to_registry():
     # the historical dispatch-rule API survives, now registry-backed.
     assert collectives.gather_wire_kind(_cfg("binary")) == "binary"
@@ -155,17 +178,29 @@ def test_hierarchical_cost_is_billed_at_effective_nodes():
 
 
 def test_flat_scatter_cost_adds_scatter_bits():
-    """§12 accounting identity: a flat-scatter config bills its wire
-    payload + seeds + the two extra main-axis collectives (scatter_bits);
+    """§12/§13 accounting identity: a flat-scatter config bills its wire
+    payload + seeds + the extra main-axis collectives (scatter_bits);
     hierarchical scatter bills 0 scatter (free inner link, §11)."""
-    for kind in ("bernoulli", "fixed_k"):
+    for kind in ("bernoulli", "fixed_k", "binary", "ternary"):
         cfg = dataclasses.replace(CODEC_CFGS[kind], scatter_decode=True)
         codec = wire.resolve(cfg)
         sb = codec.scatter_bits(N, D, cfg)
         assert sb > 0
+        align = wire.scatter_word_align(cfg)
+        ds = wire.scatter_shard_len(D, N, align)
         if kind == "bernoulli":
             # i32 rank-offset counts + the decoded f32 shard gather
-            assert sb == N * N * 32 + N * -(-D // N) * 32
+            assert align == 1
+            assert sb == N * N * 32 + N * ds * 32
+        if kind == "binary":
+            # word-aligned shard gather only — the plane travels, so no
+            # bookkeeping exchange (§13)
+            assert align == 32 and ds % 32 == 0
+            assert sb == N * ds * 32
+        if kind == "ternary":
+            # i32 pass-through counts + the word-aligned shard gather
+            assert align == 16 and ds % 16 == 0
+            assert sb == N * N * 32 + N * ds * 32
         got = comm_cost.cost_config(cfg, n=N, d=D)
         assert got == (codec.wire_bits(N, D, cfg) + codec.seed_bits(N, cfg)
                        + sb)
@@ -178,20 +213,36 @@ def test_flat_scatter_cost_adds_scatter_bits():
 
 
 def test_flat_scatter_preset_identity_holds():
-    """The shipped flat-scatter presets satisfy the full §12 identity and
-    EF delegates scatter_bits verbatim (residuals are local)."""
-    for name in ("bernoulli_seed_1bit", "ef_bernoulli"):
+    """The shipped flat-scatter presets satisfy the full §12/§13 identity
+    and EF delegates scatter_bits verbatim (residuals are local)."""
+    for name in ("bernoulli_seed_1bit", "ef_bernoulli", "binary_packed",
+                 "ternary_packed", "ef_binary", "ef_ternary",
+                 "ef_rotated_binary"):
         cfg = cfg_registry.compression_preset(name, axes=("data",))
         assert cfg.scatter_decode and not cfg.inner_axes
         codec = wire.resolve(cfg)
+        assert codec.scatter_supported
         assert comm_cost.cost_config(cfg, n=N, d=D) == (
             codec.wire_bits(N, D, cfg) + codec.seed_bits(N, cfg)
             + codec.scatter_bits(N, D, cfg))
-    plain = cfg_registry.compression_preset("bernoulli_seed_1bit",
-                                            axes=("data",))
-    ef = cfg_registry.compression_preset("ef_bernoulli", axes=("data",))
-    assert wire.resolve(ef).scatter_bits(N, D, ef) == \
-        wire.resolve(plain).scatter_bits(N, D, plain)
+    for plain_name, ef_name in [("bernoulli_seed_1bit", "ef_bernoulli"),
+                                ("binary_packed", "ef_binary"),
+                                ("ternary_packed", "ef_ternary")]:
+        plain = cfg_registry.compression_preset(plain_name, axes=("data",))
+        ef = cfg_registry.compression_preset(ef_name, axes=("data",))
+        assert wire.resolve(ef).scatter_bits(N, D, ef) == \
+            wire.resolve(plain).scatter_bits(N, D, plain)
+
+
+def test_rotated_scatter_bits_are_inner_at_padded_dim():
+    # §13: rotated decodes scatter in rotated space, so the shard gather
+    # is the inner codec's at the padded length.
+    cfg = cfg_registry.compression_preset("ef_rotated_binary",
+                                          axes=("data",))
+    codec = wire.resolve(cfg)
+    dp = rotation.padded_dim(D)
+    ds = wire.scatter_shard_len(dp, N, wire.scatter_word_align(cfg))
+    assert codec.scatter_bits(N, D, cfg) == N * ds * 32
 
 
 def test_hier_presets_resolve_and_flatten():
@@ -199,9 +250,14 @@ def test_hier_presets_resolve_and_flatten():
         cfg = cfg_registry.compression_preset(name)
         assert cfg.inner_axes == ("data",) and cfg.scatter_decode
         assert wire.resolve(cfg).scatter_supported
-        # re-pointing onto the inner axis flattens to the plain codec
+        # re-pointing onto the inner axis flattens the hierarchy but KEEPS
+        # the scatter decode — it re-targets the flat-mesh form (§12), so
+        # the flattened preset bills its shard collectives via
+        # scatter_bits instead of falling back to the O(n·d) flat unpack.
         flat = cfg_registry.compression_preset(name, axes=("data",))
-        assert flat.inner_axes == () and not flat.scatter_decode
+        assert flat.inner_axes == () and flat.scatter_decode
+        codec = wire.resolve(flat)
+        assert codec.scatter_bits(N, D, flat) > 0
 
 
 def test_rotated_wire_bits_are_inner_at_padded_dim():

@@ -23,6 +23,11 @@ simulation).  Two byte conventions are reported per preset:
   ``ternary_opt`` equal to ``ternary_packed`` (the §6 split rides the
   plane).
 
+The ``robust`` section times the decode-policy hook (DESIGN.md §14):
+trim(1)/trim(2) vs plain-mean decode µs for every gather preset at the
+same d/n — the wire is policy-blind, so the delta is pure
+order-statistics cost on the gathered stack.
+
 :func:`collect` is the machine-readable entry point benchmarks/run.py uses
 to emit BENCH_collectives.json.
 """
@@ -116,6 +121,7 @@ for name, cfg in preset_cfgs().items():
     if cfg.mode != "none":
         codec = wire.resolve(cfg)
         entry["codec"] = codec.name
+        entry["reduce"] = codec.reduce
         # flat-scatter presets (§12) ship two extra collectives — the
         # i32 rank-offset counts and the decoded f32 shard gather —
         # billed by scatter_bits; hier/non-scatter presets add 0.
@@ -126,6 +132,36 @@ for name, cfg in preset_cfgs().items():
         # net of the scatter-decode gathers.
         entry["scatter_payload_bytes"] = codec.scatter_bits(N, D, cfg) / 8
     res["presets"][name] = entry
+
+# robust decode overhead: trimmed vs mean decode us per gather preset at
+# the same d/n (f = 0 is the mean round already timed above; trim(f) only
+# changes the DECODE reduction — the wire is policy-blind, so any delta is
+# pure order-statistics cost on the gathered stack).
+res["robust"] = {}
+for name, cfg in preset_cfgs().items():
+    if cfg.mode == "none":
+        continue
+    if wire.resolve(cfg).reduce != "all_gather":
+        continue  # psum codecs reject robust policies (no per-peer rows)
+    entry = {"mean_us": res["presets"][name]["step_time_us"]}
+    for f_, tag in ((1, "trim1_us"), (2, "trim2_us")):
+        rcfg = dataclasses.replace(cfg, decode_policy=f"trim({f_})")
+        @functools.partial(compat.shard_map, mesh=mesh,
+                           in_specs=(P("data"), P()), out_specs=P(),
+                           check_vma=False)
+        def f(x, k, rcfg=rcfg):
+            return collectives.compressed_mean(x.reshape(D), k, rcfg)
+        fj = jax.jit(f)
+        fj(xs, key).block_until_ready()
+        fj(xs, key).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(REPS):
+            out = fj(xs, key)
+        out.block_until_ready()
+        entry[tag] = (time.perf_counter() - t0) / REPS * 1e6
+    entry["trim_overhead_x"] = entry["trim1_us"] / max(entry["mean_us"],
+                                                       1e-9)
+    res["robust"][name] = entry
 print(json.dumps(res))
 """
 
@@ -392,6 +428,28 @@ def rows():
             # largest n.
             "check": not nbad,
         }
+    rb = res.get("robust", {})
+    if rb:
+        ovh = sorted(e["trim_overhead_x"] for e in rb.values())
+        med = ovh[len(ovh) // 2]
+        worst = max(rb, key=lambda k: rb[k]["trim_overhead_x"])
+        robust_row = {
+            "name": "collectives.robust_decode",
+            "us_per_call": dt,
+            "derived": (f"{len(rb)} gather presets; trim(1)/mean decode "
+                        f"overhead min=x{ovh[0]:.2f} med=x{med:.2f} "
+                        f"max=x{ovh[-1]:.2f} ({worst})"),
+            # presence + sanity only: every gather preset reports positive
+            # trimmed-decode timings (wall-clock ratios on fake devices
+            # are too noisy for a tight gate).
+            "check": all(e["trim1_us"] > 0 and e["trim2_us"] > 0
+                         for e in rb.values()),
+        }
+    else:
+        robust_row = {"name": "collectives.robust_decode",
+                      "us_per_call": dt,
+                      "derived": "FAILED: no robust section in sweep",
+                      "check": False}
     return [
         {
             "name": "collectives.wire_bytes",
@@ -424,5 +482,6 @@ def rows():
             # accounting; rotated presets cost exactly their inner codec.
             "check": not bad,
         },
+        robust_row,
         node_row,
     ]

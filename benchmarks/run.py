@@ -32,7 +32,7 @@ if str(_ROOT) not in sys.path:
     sys.path.insert(0, str(_ROOT))
 
 SCHEMA_REQUIRED = {"schema", "n", "d", "presets", "overlap", "device_step",
-                   "node_sweep"}
+                   "node_sweep", "robust"}
 PRESET_REQUIRED = {"wire_bytes", "payload_bytes", "step_time_us", "ops"}
 DEVICE_STEP_REQUIRED = {"pack_us", "decode_us", "unpack_us", "wire_us",
                         "modeled_us", "row_bytes", "decode_stages"}
@@ -47,6 +47,14 @@ OVERLAP_REQUIRED = {"overlap_us", "post_us", "overlap_launches",
                     "post_launches", "buckets", "schedule"}
 NODE_SWEEP_REQUIRED = {"flat_us", "hier_us", "flat_payload_bytes",
                        "hier_cross_bytes", "accounted_cross_bytes"}
+ROBUST_REQUIRED = {"mean_us", "trim1_us", "trim2_us", "trim_overhead_x"}
+# gather presets the robust decode-policy timing must cover (psum codecs
+# reject robust policies at resolve, so they are rightly absent).
+CORE_ROBUST_PRESETS = {"bernoulli_seed_1bit", "binary_packed",
+                       "ternary_packed", "ternary_opt", "rotated_binary",
+                       "rotated_fixed_k", "ef_fixed_k", "ef_bernoulli",
+                       "ef_binary", "ef_ternary", "ef_rotated_binary",
+                       "fixed_k_gather"}
 # simulated node counts the hierarchical flat-vs-two-level sweep must cover.
 CORE_NODE_COUNTS = {"4", "8", "16"}
 # schedules that must stay in the overlap record for trajectory comparison.
@@ -127,6 +135,17 @@ def validate_schema(res: dict) -> list:
             elif not (e["hier_us"] > 0 and e["hier_cross_bytes"] > 0):
                 bad.append(f"node_sweep n={n} {cname}: "
                            f"non-positive measurements {e}")
+    rb = res.get("robust", {})
+    missing_rb = CORE_ROBUST_PRESETS - set(rb)
+    if missing_rb:
+        bad.append(f"robust: missing presets {sorted(missing_rb)}")
+    for name, e in rb.items():
+        miss = ROBUST_REQUIRED - set(e)
+        if miss:
+            bad.append(f"robust {name}: missing {sorted(miss)}")
+        elif not (e["mean_us"] > 0 and e["trim1_us"] > 0
+                  and e["trim2_us"] > 0):
+            bad.append(f"robust {name}: non-positive measurements {e}")
     missing_ov = CORE_OVERLAP_PRESETS - set(res.get("overlap", {}))
     if missing_ov:
         bad.append(f"overlap: missing presets {sorted(missing_ov)}")

@@ -182,6 +182,27 @@ def compression_preset(name: str,
     return dataclasses.replace(cfg, axes=axes, inner_axes=inner)
 
 
+def robust_preset(name: str, policy: str,
+                  axes: Tuple[str, ...] | None = None
+                  ) -> core_types.CompressionConfig:
+    """A named preset with a robust decode policy (DESIGN.md §14).
+
+    ``policy`` is a decode-policy string ("trim(1)", "median",
+    "mean_trim(1)", or "mean"/"trim(0)" for the plain decoder).  The wire
+    format — payload bytes, seeds, scatter split — is exactly the base
+    preset's: only the decode-time reduction changes, so every accounting
+    identity and the golden wire matrix stay pinned.  Deliberately NOT a
+    new COMPRESSION_PRESETS entry: the preset dict is the golden-coverage
+    universe (tests assert golden keys == preset names exactly), and a
+    decode policy is an orthogonal axis over it, not a new wire protocol.
+    Raises like ``resolve`` for psum-reduce presets (fixed_k_1bit, dense
+    simulation) under a non-mean policy — those sum rows inside the
+    collective, leaving nothing to trim.
+    """
+    return dataclasses.replace(compression_preset(name, axes),
+                               decode_policy=policy)
+
+
 def get_run_config(arch: str, shape: str, *, multi_pod: bool = False,
                    compression: core_types.CompressionConfig | str | None = None
                    ) -> RunConfig:

@@ -137,7 +137,21 @@ def gather_wire_kind(cfg: t.CompressionConfig) -> str:
     return wire.gather_kind(cfg)
 
 
-def compressed_mean(x, key, cfg: t.CompressionConfig):
+def _masked_exact_mean(x, drop_mask, cfg: t.CompressionConfig):
+    """Exact survivors-only mean for the uncompressed paths.
+
+    ``drop_mask`` is indexed by this node's rank over ``cfg.axes`` (the
+    codec axes — the drop unit is the cross-host peer; inner pre-reduce
+    peers are assumed healthy, docs/DESIGN.md §14) and reuses the
+    :func:`partial_mean` contract: renormalize by the survivor count, NaN
+    when everyone is dropped.
+    """
+    rank, _ = _axis_rank_size(tuple(cfg.axes))
+    keep = drop_mask[rank].astype(x.dtype)
+    return partial_mean(x * keep, keep, tuple(cfg.inner_axes) + tuple(cfg.axes))
+
+
+def compressed_mean(x, key, cfg: t.CompressionConfig, drop_mask=None):
     """Estimate mean(x) over cfg.axes under the configured protocol.
 
     Must be called inside shard_map with cfg.axes manual.  Unbiased for
@@ -149,13 +163,25 @@ def compressed_mean(x, key, cfg: t.CompressionConfig):
     /HLO measurement belongs on this entry point; training threads
     residuals through :func:`compressed_mean_stateful`, whose *time
     average* is what recovers the mean (docs/DESIGN.md §8).
+
+    ``drop_mask`` is an optional traced (n,) 0/1 operand over the ranks of
+    ``cfg.axes`` (1 = alive): dropped peers are excluded at decode time and
+    the estimate renormalizes over the survivors (partial_mean contract —
+    NaN when nobody survives).  It is data, never a static argument, so a
+    FailurePlan can change the dropped set every step with zero recompiles
+    (tests/distributed_checks/robust_decode_check.py pins the jit cache
+    size).  The wire payload is unchanged — exclusion happens after the
+    gather (docs/DESIGN.md §14).
     """
     if cfg.mode == "none" or x.size < cfg.min_compress_size:
-        return jax.lax.pmean(x, tuple(cfg.inner_axes) + tuple(cfg.axes))
-    return wire.resolve(cfg).mean(x, key, cfg)
+        if drop_mask is None:
+            return jax.lax.pmean(x, tuple(cfg.inner_axes) + tuple(cfg.axes))
+        return _masked_exact_mean(x, drop_mask, cfg)
+    return wire.resolve(cfg).mean(x, key, cfg, drop_mask)
 
 
-def compressed_mean_stateful(x, state, key, cfg: t.CompressionConfig):
+def compressed_mean_stateful(x, state, key, cfg: t.CompressionConfig,
+                             drop_mask=None):
     """One stateful round of the resolved codec: (estimate, new_state).
 
     The generalization of :func:`compressed_mean` for codecs that thread
@@ -163,15 +189,21 @@ def compressed_mean_stateful(x, state, key, cfg: t.CompressionConfig):
     production case (repro.core.wire.ef).  ``state`` may be shaped like
     ``x`` or flat; it is threaded flat through the codec and returned in
     its original shape.  Stateless codecs pass the state through untouched,
-    so callers that own state need no dispatch of their own.
+    so callers that own state need no dispatch of their own.  ``drop_mask``
+    as in :func:`compressed_mean`; a dropped peer's residual stays local
+    and re-enters through its own future messages.
     """
     if cfg.mode == "none" or x.size < cfg.min_compress_size:
-        return jax.lax.pmean(x, tuple(cfg.inner_axes) + tuple(cfg.axes)), state
+        if drop_mask is None:
+            y = jax.lax.pmean(x, tuple(cfg.inner_axes) + tuple(cfg.axes))
+        else:
+            y = _masked_exact_mean(x, drop_mask, cfg)
+        return y, state
     codec = wire.resolve(cfg)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
     st = state.reshape(-1).astype(jnp.float32)
-    y, st2 = codec.mean_flat_stateful(flat, st, key, cfg)
+    y, st2 = codec.mean_flat_stateful(flat, st, key, cfg, drop_mask)
     return (y.reshape(shape).astype(dtype),
             st2.reshape(state.shape).astype(state.dtype))
 

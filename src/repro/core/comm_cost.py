@@ -191,6 +191,11 @@ def cost_config(cfg, *, n: int, d: int, mesh_sizes=None) -> float:
     so their bytes are billed too via ``codec.scatter_bits`` (zero for
     every other config; the hierarchical shard gather rides the free
     inner link per the §11 convention).
+
+    ``cfg.decode_policy`` and decode-time drop masks never change the
+    payload (DESIGN.md §14): robust reductions and peer exclusion happen
+    AFTER the gather, on the same wire rows — the cost here is identical
+    for "mean" and any trim/median policy over the same codec.
     """
     from repro.core import wire  # local import: wire consumes this module
     n_eff = wire.effective_nodes(cfg, n, mesh_sizes)

@@ -146,6 +146,59 @@ def mse_rotated_fixed_k(xs, k, krot):
     return mse_fixed_k(zs, k, jnp.mean(zs, axis=-1))
 
 
+# --- §14: robust (trimmed) decode bounds ---------------------------------- #
+
+def heterogeneity(xs):
+    """Σ_i ‖X_i − X̄‖² — the data-dispersion term of the trimmed bounds."""
+    dev = xs - jnp.mean(xs, axis=0, keepdims=True)
+    return jnp.sum(dev * dev)
+
+
+def mse_trimmed(base_mse, xs, f: int):
+    """Clean-regime bound on the trim(f) decoder's MSE (DESIGN.md §14).
+
+    The trimmed decode keeps, per coordinate, m = n − 2f of the peer
+    reconstructions Y_ij and averages them: est_j = Σ_i w_ij Y_ij with
+    w_ij ∈ {0, 1/m} and Σ_i w_ij = 1.  Writing the error against the true
+    mean X̄_j and applying Cauchy–Schwarz over the ≤ n active terms,
+
+        E(est_j − X̄_j)²  ≤  (n/m²)·Σ_i E(Y_ij − X̄_j)²
+                          =  (n/m²)·Σ_i [ E(Y_ij − X_ij)² + (X_ij − X̄_j)² ],
+
+    where Σ_ij E(Y_ij − X_ij)² = n²·MSE_mean (the per-node encoder noise
+    whose (1/n²)-scaled sum is the plain decoder's Lemma 3.2/3.4 closed
+    form) and Σ_ij (X_ij − X̄_j)² = :func:`heterogeneity` — the bias a
+    selection rule can pick up because the trimmed mean of *honest* values
+    need not be the honest mean when the data disagree across nodes.  With
+    (n/m²) ≤ 1/(n − 2f) for m = n − 2f ≤ n:
+
+        MSE_trim  ≤  (n²·MSE_mean + Σ_i ‖X_i − X̄‖²) / (n − 2f).
+
+    Valid for ANY rule keeping n − 2f rows per coordinate — in particular
+    for the clean (adversary-free) regime where all kept rows are honest.
+    With adversaries present the bound applies to the kept honest rows via
+    the JACM86 containment property (tested, not bounded in closed form
+    here).  ``f = 0`` returns ``base_mse`` exactly: the trim(0) decoder IS
+    the plain averaging decoder (types.parse_decode_policy normalizes it).
+    """
+    n = xs.shape[0]
+    if f == 0:
+        return base_mse
+    if n <= 2 * f:
+        raise ValueError(f"trim({f}) undefined for n={n}: needs n > 2f")
+    return (n * n * base_mse + heterogeneity(xs)) / (n - 2 * f)
+
+
+def mse_trimmed_bernoulli(xs, probs, mus, f: int):
+    """:func:`mse_trimmed` over the Lemma 3.2 Bernoulli closed form."""
+    return mse_trimmed(mse_bernoulli(xs, probs, mus), xs, f)
+
+
+def mse_trimmed_binary(xs, f: int):
+    """:func:`mse_trimmed` over the Example 4 binary closed form."""
+    return mse_trimmed(mse_binary(xs), xs, f)
+
+
 # --- Theorem 6.1 --------------------------------------------------------- #
 
 def thm61_bounds(xs, mus, B):

@@ -9,6 +9,7 @@ The vocabulary follows the paper (Konečný & Richtárik, 2016):
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Optional, Tuple
 
 # Number of bits for one floating point value on the wire ("r" in the paper).
@@ -23,6 +24,40 @@ ENCODERS = ("identity", "bernoulli", "fixed_k", "binary", "ternary")
 CENTERS = ("zero", "mean", "min", "optimal")
 PROBS = ("uniform", "optimal")
 MODES = ("none", "gather_decode", "shared_support", "dense_sim")
+
+# Decode-side aggregation policies (DESIGN.md §14).  "mean" is the paper's
+# averaging decoder γ (§2); the rest are the robust coordinate-wise
+# reductions of the f-of-n trimming idiom (approximate consensus, JACM86):
+# "trim(f)" / "mean_trim(f)" carry an integer trim count in the string.
+DECODE_POLICIES = ("mean", "median", "trim", "mean_trim")
+_POLICY_RE = re.compile(r"(trim|mean_trim)\((\d+)\)")
+
+
+def parse_decode_policy(policy: str) -> Tuple[str, int]:
+    """``cfg.decode_policy`` string → ``(kind, f)``.
+
+    ``"mean"`` / ``"median"`` → ``("mean", 0)`` / ``("median", 0)``;
+    ``"trim(f)"`` / ``"mean_trim(f)"`` → ``("trim", f)`` /
+    ``("mean_trim", f)`` with integer f ≥ 0.
+
+    Normalization rule: ``trim(0)`` IS the mean — a trimmed mean that trims
+    nothing averages all n rows — so it parses to ``("mean", 0)`` and
+    dispatches to the codec's fused averaging decode verbatim (bit-for-bit
+    equality is pinned by tests/test_robust_decode.py).  ``mean_trim(0)``
+    does NOT normalize: it is the midpoint (min+max)/2 of the untrimmed
+    range, a different estimator.
+    """
+    m = _POLICY_RE.fullmatch(policy.strip())
+    if m:
+        kind, f = m.group(1), int(m.group(2))
+        if kind == "trim" and f == 0:
+            return "mean", 0
+        return kind, f
+    if policy in ("mean", "median"):
+        return policy, 0
+    raise ValueError(
+        f"unknown decode_policy {policy!r}; want 'mean', 'median', "
+        "'trim(f)' or 'mean_trim(f)' with integer f >= 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +226,17 @@ class CompressionConfig:
     inner_axes: Tuple[str, ...] = ()
     scatter_decode: bool = False
     error_feedback: bool = False
+    # Decode-side aggregation over the n per-peer reconstructions
+    # (DESIGN.md §14): "mean" (the paper's averaging decoder γ, the fused
+    # fast path), "median", "trim(f)" (coordinate-wise trimmed mean: drop
+    # the f largest and f smallest of the n values per coordinate, average
+    # the rest) or "mean_trim(f)" (the JACM86 fault-tolerant midpoint:
+    # average of the smallest and largest survivors after trimming f from
+    # each end).  Decode-only: the wire bytes of every codec are identical
+    # across policies (golden wire matrix passes unregenerated), and the
+    # robust policies require per-peer wire rows, so the registry rejects
+    # them for the "psum" codecs (fixed_k_shared / dense) at resolve time.
+    decode_policy: str = "mean"
     wire_dtype: str = "bfloat16"
     # Gradient bucketing (repro.train.bucketing): one collective per bucket
     # instead of one per pytree leaf.  Applies to every mode incl. "none"
@@ -211,6 +257,7 @@ class CompressionConfig:
             raise ValueError(
                 f"inner_axes and axes must be disjoint; both contain "
                 f"{sorted(overlap)}")
+        parse_decode_policy(self.decode_policy)  # raises on bad strings
 
 
 def fixed_k_from_fraction(d: int, fraction: float) -> int:

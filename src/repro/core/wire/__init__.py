@@ -13,4 +13,6 @@ from repro.core.wire.base import (  # noqa: F401
 from repro.core.wire.ef import EFCodec  # noqa: F401
 from repro.core.wire.registry import (  # noqa: F401
     gather_kind, get, names, register, resolve)
+from repro.core.wire.robust import (  # noqa: F401
+    parse_policy, reduce_rows)
 from repro.core.wire.rotated import RotatedCodec  # noqa: F401

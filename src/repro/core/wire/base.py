@@ -54,6 +54,7 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.core import types as t
+from repro.core.wire import robust
 
 Axes = Tuple[str, ...]
 
@@ -256,6 +257,60 @@ class WireCodec:
         acc = jax.lax.fori_loop(0, n, body, jnp.zeros((d,), jnp.float32))
         return acc / n
 
+    def decode_rows(self, rows, key, cfg: t.CompressionConfig,
+                    d: int, n: int):
+        """The (n, d) stack of per-peer dense reconstructions Y_i.
+
+        The materialized-stack companion of :meth:`decode_gathered`: row i
+        is exactly ``unpack(rows[i], i, ...)``.  This is the input of the
+        robust decode reductions (DESIGN.md §14, :mod:`repro.core.wire
+        .robust`) — order statistics need every peer's value per
+        coordinate, so the fused sum-only decoders cannot serve them.
+        """
+        peers = jnp.arange(n, dtype=jnp.int32)
+        return jax.vmap(
+            lambda row, i: self.unpack(row, i, key, cfg, d))(rows, peers)
+
+    def decode_rows_shard(self, rows, key, cfg: t.CompressionConfig,
+                          d: int, n: int, start, ds: int, nshards: int):
+        """One contiguous ``ds``-coordinate window of :meth:`decode_rows`.
+
+        Returns the (n, ds) slice ``decode_rows(...)[:, start:start+ds]``
+        with coordinates past d zero-padded (``nshards·ds ≥ d`` by
+        :func:`scatter_shard_len`), so robust reductions compose with the
+        §12/§13 reduce-scatter decode per coordinate-shard: the shard
+        window sees exactly the flat stack's values, and the word-aligned
+        shard splits of the bit-plane codecs are honored by the caller
+        passing an aligned ``ds``.  ``start`` may be traced (shard·ds).
+        """
+        pad = nshards * ds - d
+        peers = jnp.arange(n, dtype=jnp.int32)
+
+        def one(row, i):
+            y = jnp.pad(self.unpack(row, i, key, cfg, d), (0, pad))
+            return jax.lax.dynamic_slice(y, (start,), (ds,))
+        return jax.vmap(one)(rows, peers)
+
+    def decode_rows_reduce(self, rows, key, cfg: t.CompressionConfig,
+                           d: int, n: int, drop_mask=None):
+        """Policy-dispatched flat decode over the gathered wire rows.
+
+        THE decode-reduction hook (DESIGN.md §14): ``cfg.decode_policy``
+        == "mean" with no ``drop_mask`` takes the codec's fused
+        :meth:`decode_gathered` verbatim (bit-identical to the historical
+        decode — the golden wire matrix and HLO pins never see this
+        branch); any robust policy or a drop mask materializes the
+        per-peer stack and runs :func:`repro.core.wire.robust
+        .reduce_rows`.  ``drop_mask`` is a traced (n,) 0/1 operand — mask
+        changes never recompile — and the masked mean renormalizes by the
+        kept count per the ``partial_mean`` contract (NaN on all-dead).
+        """
+        kind, f = robust.parse_policy(cfg.decode_policy)
+        if kind == "mean" and drop_mask is None:
+            return self.decode_gathered(rows, key, cfg, d, n)
+        stack = self.decode_rows(rows, key, cfg, d, n)
+        return robust.reduce_rows(stack, kind, f, drop_mask)
+
     def decode_gathered_shard(self, rows, key, cfg: t.CompressionConfig,
                               d: int, n: int, shard, nshards: int):
         """One shard of the averaging decode (reduce-scatter decomposition).
@@ -295,21 +350,24 @@ class WireCodec:
         shp = self.state_shape(d, cfg)
         return None if shp is None else jnp.zeros(shp, jnp.float32)
 
-    def mean_flat_stateful(self, flat, state, key, cfg: t.CompressionConfig):
+    def mean_flat_stateful(self, flat, state, key, cfg: t.CompressionConfig,
+                           drop_mask=None):
         """One stateful round: returns (mean_estimate, new_state).
 
         Default: stateless codecs ignore and pass the state through, so
         every codec is drivable through this one entry point.  Like
         :meth:`mean_flat`, the exact inner-axes pre-reduce of the
         hierarchical schedule happens here, before any codec layer runs.
+        ``drop_mask`` as in :meth:`mean_flat`.
         """
         if cfg.inner_axes:
             flat = jax.lax.pmean(flat, cfg.inner_axes)
-        return self._round_stateful(flat, state, key, cfg)
+        return self._round_stateful(flat, state, key, cfg, drop_mask)
 
     # ---- the collective --------------------------------------------------- #
 
-    def mean_flat(self, flat, key, cfg: t.CompressionConfig):
+    def mean_flat(self, flat, key, cfg: t.CompressionConfig,
+                  drop_mask=None):
         """Estimate mean(flat) over cfg.inner_axes + cfg.axes; must run
         inside shard_map.
 
@@ -317,35 +375,54 @@ class WireCodec:
         (fast) axes is exact — one pmean before the codec — and the codec
         round runs only across ``cfg.axes``, the slow link.  With empty
         ``inner_axes`` this is the historical flat round, op-for-op.
+
+        ``drop_mask`` (DESIGN.md §14): optional traced (n,) 0/1 alive mask
+        over the codec ranks of ``cfg.axes`` (1 = keep).  Dropped peers
+        are excluded at decode time — their wire rows still travel (the
+        collective shape is static), but the decode renormalizes over the
+        kept rows per the ``partial_mean`` contract (NaN on all-dead).
+        The mask is a traced operand: changing it never recompiles.  For
+        hierarchical configs the drop unit is the cross-host peer — the
+        inner (intra-host) pre-reduce is assumed healthy.
         """
         if cfg.inner_axes:
             flat = jax.lax.pmean(flat, cfg.inner_axes)
-        return self._round(flat, key, cfg)
+        return self._round(flat, key, cfg, drop_mask)
 
-    def _round(self, flat, key, cfg: t.CompressionConfig):
+    def _round(self, flat, key, cfg: t.CompressionConfig, drop_mask=None):
         """One codec round across cfg.axes (input already inner-reduced).
 
         Gather codecs run the star protocol (§2/§4.4) — one all_gather of
         the packed buffer per call, decode locally.  "psum" codecs pmean
-        the packed buffer and decode the reduced wire.  Wrapper codecs
-        (rotation, error feedback) override THIS hook, not the public
-        entry points, so the inner-axes pre-reduce happens exactly once at
-        the outermost layer.
+        the packed buffer and decode the reduced wire; with a drop mask
+        the pmean becomes the mask-weighted partial mean of the packed
+        buffers (their decode is affine in the wire values, so excluding
+        a peer's buffer excludes its message).  Wrapper codecs (rotation,
+        error feedback) override THIS hook, not the public entry points,
+        so the inner-axes pre-reduce happens exactly once at the
+        outermost layer.
         """
         d = flat.shape[0]
         rank, n = axis_rank_size(cfg.axes)
         buf = self.pack(flat, key, rank, cfg)
         if self.reduce == "psum":
-            wire = jax.lax.pmean(buf, cfg.axes)
+            if drop_mask is None:
+                wire = jax.lax.pmean(buf, cfg.axes)
+            else:
+                keep = drop_mask[rank].astype(jnp.float32)
+                num = jax.lax.psum(buf.astype(jnp.float32) * keep, cfg.axes)
+                den = jax.lax.psum(keep, cfg.axes)
+                wire = (num / den).astype(buf.dtype)
             return self.decode_reduced(wire, key, cfg, d)
-        return self.gather_decode(buf, key, cfg, d, n)
+        return self.gather_decode(buf, key, cfg, d, n, drop_mask)
 
-    def _round_stateful(self, flat, state, key, cfg: t.CompressionConfig):
+    def _round_stateful(self, flat, state, key, cfg: t.CompressionConfig,
+                        drop_mask=None):
         """Stateful companion of :meth:`_round` (input inner-reduced)."""
-        return self._round(flat, key, cfg), state
+        return self._round(flat, key, cfg, drop_mask), state
 
     def gather_decode(self, buf, key, cfg: t.CompressionConfig,
-                      d: int, n: int):
+                      d: int, n: int, drop_mask=None):
         """all_gather the packed buffer over cfg.axes and decode.
 
         With ``cfg.scatter_decode`` the decode is reduce-scattered over
@@ -357,22 +434,39 @@ class WireCodec:
         reassembles the estimate.  Shards concatenate in shard-rank order
         and pads sit past d, so the result equals the flat decode
         bit-for-bit.
+
+        Decode policy (DESIGN.md §14): the plain averaging decode with no
+        ``drop_mask`` keeps the codec's fused paths verbatim; a robust
+        ``cfg.decode_policy`` or a mask routes through the per-peer row
+        stack (:meth:`decode_rows` / :meth:`decode_rows_shard`) and
+        :func:`repro.core.wire.robust.reduce_rows`.  The robust scatter
+        branch applies the reduction per coordinate-shard — coordinate-
+        wise order statistics partition exactly like the averaging
+        decode, so the §12/§13 word-aligned shard windows survive and the
+        composed result equals the flat robust decode bit-for-bit.
         """
         rows = gather_nested(buf, cfg.axes).reshape(n, buf.shape[0])
+        kind, f = robust.parse_policy(cfg.decode_policy)
         if cfg.scatter_decode:
             saxes = scatter_axes(cfg)
             shard, nshards = axis_rank_size(saxes)
-            part = self.decode_gathered_shard(rows, key, cfg, d, n,
-                                              shard, nshards)
+            if kind == "mean" and drop_mask is None:
+                part = self.decode_gathered_shard(rows, key, cfg, d, n,
+                                                  shard, nshards)
+            else:
+                ds = scatter_shard_len(d, nshards, self.scatter_align(cfg))
+                stack = self.decode_rows_shard(rows, key, cfg, d, n,
+                                               shard * ds, ds, nshards)
+                part = robust.reduce_rows(stack, kind, f, drop_mask)
             full = gather_nested(part, saxes).reshape(-1)
             return full[:d]
-        return self.decode_gathered(rows, key, cfg, d, n)
+        return self.decode_rows_reduce(rows, key, cfg, d, n, drop_mask)
 
-    def mean(self, x, key, cfg: t.CompressionConfig):
+    def mean(self, x, key, cfg: t.CompressionConfig, drop_mask=None):
         """Shape/dtype-preserving wrapper around :meth:`mean_flat`."""
         shape, dtype = x.shape, x.dtype
         flat = x.reshape(-1).astype(jnp.float32)
-        y = self.mean_flat(flat, key, cfg)
+        y = self.mean_flat(flat, key, cfg, drop_mask)
         return y.reshape(shape).astype(dtype)
 
     def __repr__(self):

@@ -358,14 +358,23 @@ class EFCodec(base.WireCodec):
     def scatter_align(self, cfg):
         return self.inner.scatter_align(cfg)
 
-    def gather_decode(self, buf, key, cfg, d, n):
+    def gather_decode(self, buf, key, cfg, d, n, drop_mask=None):
         # full delegation (not just the decode hooks): RotatedCodec owns
         # its scatter decomposition inside gather_decode — shards live in
         # rotated space at the padded length — so EF hands the whole
         # gather+decode to the inner codec instead of re-running base's
         # scatter branch at the model d.  For non-rotated inners this is
-        # op-for-op the base implementation.
-        return self.inner.gather_decode(buf, key, cfg, d, n)
+        # op-for-op the base implementation.  Robust decode policies and
+        # drop masks (§14) delegate the same way — the reduction runs over
+        # the inner codec's reconstructions of the twin rows; a dropped
+        # peer's residual stays local to that peer and re-enters through
+        # its own future messages, so exclusion at decode time loses no
+        # mass permanently.
+        return self.inner.gather_decode(buf, key, cfg, d, n, drop_mask)
+
+    def decode_rows_reduce(self, rows, key, cfg, d, n, drop_mask=None):
+        return self.inner.decode_rows_reduce(rows, key, cfg, d, n,
+                                             drop_mask)
 
     # ---- the stateful round ----------------------------------------------- #
 
@@ -379,7 +388,7 @@ class EFCodec(base.WireCodec):
         """
         return _twin_bound(self.inner, flat, key, cfg)
 
-    def _round_stateful(self, flat, state, key, cfg):
+    def _round_stateful(self, flat, state, key, cfg, drop_mask=None):
         """One EF round: (estimate, new_residual); must run in shard_map.
 
         The new residual is v minus the reconstruction of the bytes this
@@ -397,18 +406,27 @@ class EFCodec(base.WireCodec):
         v = flat + state
         buf, recon = _twin_pack_recon(self.inner, v, key, rank, cfg)
         if self.reduce == "psum":
-            wire = jax.lax.pmean(buf, cfg.axes)
+            if drop_mask is None:
+                wire = jax.lax.pmean(buf, cfg.axes)
+            else:
+                # masked weighted psum, mirroring base._round: dropped
+                # peers contribute zero to both numerator and count.
+                keep = drop_mask[rank].astype(jnp.float32)
+                num = jax.lax.psum(buf.astype(jnp.float32) * keep, cfg.axes)
+                den = jax.lax.psum(keep, cfg.axes)
+                wire = (num / den).astype(buf.dtype)
             est = self.inner.decode_reduced(wire, key, cfg, d)
         else:
-            est = self.gather_decode(buf, key, cfg, d, n)
+            est = self.gather_decode(buf, key, cfg, d, n, drop_mask)
         return est, v - recon
 
-    def _round(self, flat, key, cfg):
+    def _round(self, flat, key, cfg, drop_mask=None):
         """Stateless round: zero residual, state discarded.
 
         Keeps EF configs usable by payload/HLO measurements and benchmarks
         that lower ``compressed_mean``; training threads real residuals via
         ``compressed_mean_stateful``.
         """
-        y, _ = self._round_stateful(flat, jnp.zeros_like(flat), key, cfg)
+        y, _ = self._round_stateful(flat, jnp.zeros_like(flat), key, cfg,
+                                    drop_mask)
         return y

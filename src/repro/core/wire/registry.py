@@ -26,7 +26,7 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core import types as t
-from repro.core.wire import base, codecs, ef, rotated
+from repro.core.wire import base, codecs, ef, robust, rotated
 
 _CODECS: Dict[str, base.WireCodec] = {}
 
@@ -133,4 +133,11 @@ def resolve(cfg: t.CompressionConfig) -> base.WireCodec:
             f"scatter_decode requires a linear gather decode; codec "
             f"{codec.name!r} does not partition coordinate-wise "
             "(scatter_supported=False)")
+    if codec.reduce == "psum" and not robust.is_mean(cfg):
+        # robust order statistics need the individual per-peer wire rows;
+        # a psum codec sums them inside the collective, so there is
+        # nothing left to trim at decode time.
+        raise ValueError(
+            f"decode_policy {cfg.decode_policy!r} needs per-peer wire rows "
+            f"(gather reduce); codec {codec.name!r} reduces by psum")
     return codec

@@ -1,0 +1,125 @@
+"""Robust decode reductions: coordinate-wise f-of-n trimming on the
+gathered per-peer reconstructions (docs/DESIGN.md §14).
+
+The paper's averaging decoder γ (§2) is n-agnostic, and the gather codecs
+already materialize all n per-node wire rows at decode time — so replacing
+the per-coordinate average with a robust order-statistic reduction costs
+nothing extra on the wire.  This module is that reduction, shared by every
+gather codec through the :meth:`WireCodec.decode_rows_reduce` hook in
+:mod:`repro.core.wire.base`:
+
+  * ``mean``      — masked ascending-peer average; the only policy that
+    also has a fused fast path (:meth:`decode_gathered`) when no peer is
+    dropped.  The masked accumulation is ``where(keep_i, acc + Y_i, acc)``
+    in ascending peer order, NOT ``acc + keep_i * Y_i`` — the ``where``
+    form makes the masked decode bit-identical to a reference loop over
+    only the surviving peers (multiplying by the mask would fold the
+    dropped peer's row into the sum as ``+0.0``, which is not a float
+    no-op: ``-0.0 + 0.0`` flips the sign bit, and NaN/Inf rows poison it).
+  * ``trim(f)``   — coordinate-wise trimmed mean: drop the f largest and f
+    smallest of the kept values per coordinate, average the remaining
+    m − 2f (m = number of kept peers).  The f-of-n trimming idiom of
+    approximate consensus (Dolev et al., JACM 1986): with c ≤ f corrupt
+    rows and m > 2f every kept value after trimming lies inside the honest
+    values' range per coordinate, so the estimate is contained in the
+    honest convex hull (breakdown property, tests/test_robust_decode.py).
+  * ``median``    — coordinate-wise median of the kept values (the
+    midpoint pair of the kept ranks, averaged).
+  * ``mean_trim(f)`` — the JACM86 fault-tolerant midpoint: the average of
+    the smallest and largest survivors after trimming f from each end
+    (ranks f and m−1−f of the kept values).
+
+Dropped peers and traced masks.  ``keep`` is a traced (n,) 0/1 operand —
+never a static argument — so a :class:`FailurePlan` can change the dropped
+set every step with ZERO recompiles.  The order statistics still need the
+kept values contiguous in rank order, which a plain value sort cannot give
+(an adversarial NaN row sorts after any +inf sentinel for dropped rows):
+the sort is a two-key lexicographic ``lax.sort`` on ``(1 − keep, value)``,
+putting all kept rows first (value-sorted, NaNs last among them — jax
+total order) and all dropped rows after.  Rank windows are then computed
+against the traced kept count m.
+
+All-dead / over-trimmed contract: when the reduction is undefined (m = 0,
+or m ≤ 2f for the trimming policies) the result is NaN — the same loud
+0/0 contract as :func:`repro.core.collectives.partial_mean`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import types as t
+
+# the canonical policy parser lives next to the config field it validates.
+parse_policy = t.parse_decode_policy
+
+
+def _sorted_kept(stack, keep):
+    """Peer-axis sort of ``stack`` with kept rows first.
+
+    Returns ``(s, m)``: ``s`` is (n, d') with, per coordinate, the kept
+    values in ascending jax total order (NaN last) occupying ranks
+    0..m−1 and the dropped rows' values after them; ``m`` is the traced
+    f32 kept count.  With ``keep=None`` this is a plain per-coordinate
+    sort and m = n (static).
+    """
+    n = stack.shape[0]
+    if keep is None:
+        return jnp.sort(stack, axis=0), jnp.float32(n)
+    keep = keep.astype(jnp.float32)
+    key0 = jnp.broadcast_to((1.0 - keep)[:, None], stack.shape)
+    _, s = jax.lax.sort((key0, stack), dimension=0, num_keys=2)
+    return s, jnp.sum(keep)
+
+
+def reduce_rows(stack, kind: str, f: int, keep=None):
+    """One robust reduction over an (n, d') per-peer reconstruction stack.
+
+    ``kind``/``f`` come from :func:`parse_policy`; ``keep`` is an optional
+    traced (n,) 0/1 alive mask (1 = keep the peer's row).  Returns the
+    (d',) f32 estimate; NaN where the reduction is undefined (see module
+    docstring).  Permutation-invariant over the peer axis for the
+    order-statistic policies by construction (sorting forgets peer order).
+    """
+    stack = stack.astype(jnp.float32)
+    n = stack.shape[0]
+    if kind == "mean":
+        if keep is None:
+            def body(i, acc):
+                return acc + stack[i]
+            return jax.lax.fori_loop(
+                0, n, body, jnp.zeros(stack.shape[1:], jnp.float32)) / n
+        keepf = keep.astype(jnp.float32)
+
+        def body(i, acc):
+            return jnp.where(keepf[i] > 0, acc + stack[i], acc)
+        acc = jax.lax.fori_loop(0, n, body,
+                                jnp.zeros(stack.shape[1:], jnp.float32))
+        return acc / jnp.sum(keepf)
+    if kind not in ("trim", "median", "mean_trim"):
+        raise ValueError(f"unknown robust reduction kind {kind!r}")
+    s, m = _sorted_kept(stack, keep)
+    nan = jnp.float32(jnp.nan)
+    if kind == "trim":
+        ranks = jnp.arange(n, dtype=jnp.float32)[:, None]
+        w = (ranks >= f) & (ranks < m - f)
+        cnt = m - 2.0 * f
+        est = jnp.sum(jnp.where(w, s, 0.0), axis=0) / cnt
+        return jnp.where(cnt > 0, est, nan)
+    mi = m.astype(jnp.int32)
+    if kind == "median":
+        lo, hi = (mi - 1) // 2, mi // 2
+        guard = mi > 0
+    else:  # mean_trim: midpoint of the extreme survivors after trimming
+        lo, hi = jnp.int32(f), mi - 1 - f
+        guard = mi > 2 * f
+    take = lambda r: jnp.take_along_axis(  # noqa: E731
+        s, jnp.broadcast_to(jnp.clip(r, 0, n - 1), (1,) + s.shape[1:]),
+        axis=0)[0]
+    est = 0.5 * (take(lo) + take(hi))
+    return jnp.where(guard, est, nan)
+
+
+def is_mean(cfg: t.CompressionConfig) -> bool:
+    """True iff ``cfg`` decodes with the plain averaging decoder."""
+    return parse_policy(cfg.decode_policy)[0] == "mean"

@@ -107,7 +107,7 @@ class RotatedCodec(base.WireCodec):
     def scatter_align(self, cfg):
         return self.inner.scatter_align(cfg)
 
-    def gather_decode(self, buf, key, cfg, d, n):
+    def gather_decode(self, buf, key, cfg, d, n, drop_mask=None):
         # Rotated decodes scatter in ROTATED space (DESIGN.md §13): the
         # unrotated estimate is not coordinate-partitionable (every output
         # coordinate mixes all of z̄), so the shard decomposition — shard
@@ -115,9 +115,21 @@ class RotatedCodec(base.WireCodec):
         # inside the inner codec at the padded length, and the single
         # inverse rotation is applied to the reassembled z̄.  Flat-decode
         # configs take the exact historical op sequence through the same
-        # delegation.
+        # delegation.  Robust decode policies and drop masks (§14) ride
+        # the same delegation: the coordinate-wise reduction happens in
+        # ROTATED space — trimming per rotated coordinate, where the §7.2
+        # rotation has spread any coordinate-aligned outlier energy — and
+        # the single inverse rotation maps the robust estimate back.
         dp = rotation.padded_dim(d)
-        zbar = self.inner.gather_decode(buf, key, cfg, dp, n)
+        zbar = self.inner.gather_decode(buf, key, cfg, dp, n, drop_mask)
+        return rotation.unrotate(rotation.rotation_key(key), zbar, d)
+
+    def decode_rows_reduce(self, rows, key, cfg, d, n, drop_mask=None):
+        # collective-free policy decode: the reduction runs in rotated
+        # space at the padded length (same convention as gather_decode).
+        dp = rotation.padded_dim(d)
+        zbar = self.inner.decode_rows_reduce(rows, key, cfg, dp, n,
+                                             drop_mask)
         return rotation.unrotate(rotation.rotation_key(key), zbar, d)
 
     def decode_reduced(self, wire, key, cfg, d):
@@ -130,7 +142,7 @@ class RotatedCodec(base.WireCodec):
     def state_shape(self, d, cfg):
         return self.inner.state_shape(rotation.padded_dim(d), cfg)
 
-    def _round_stateful(self, flat, state, key, cfg):
+    def _round_stateful(self, flat, state, key, cfg, drop_mask=None):
         # The state lives in the (per-step-reseeded) rotated basis — see
         # docs/DESIGN.md §8 for why EF∘rotation (EF outermost, as built by
         # registry.resolve) is the production order.  Overriding the
@@ -142,12 +154,13 @@ class RotatedCodec(base.WireCodec):
         d = flat.shape[0]
         krot = rotation.rotation_key(key)
         z = rotation.rotate(krot, flat)
-        zbar, new_state = self.inner._round_stateful(z, state, key, cfg)
+        zbar, new_state = self.inner._round_stateful(z, state, key, cfg,
+                                                     drop_mask)
         return rotation.unrotate(krot, zbar, d), new_state
 
-    def _round(self, flat, key, cfg):
+    def _round(self, flat, key, cfg, drop_mask=None):
         d = flat.shape[0]
         krot = rotation.rotation_key(key)
         z = rotation.rotate(krot, flat)
-        zbar = self.inner._round(z, key, cfg)
+        zbar = self.inner._round(z, key, cfg, drop_mask)
         return rotation.unrotate(krot, zbar, d)

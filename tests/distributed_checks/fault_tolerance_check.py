@@ -15,7 +15,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
 from repro.distributed.fault_tolerance import (FailurePlan, partial_mean,  # noqa: E402
-                                               robust_mean)
+                                               robust_mean, survivor_index)
 
 mesh = jax.make_mesh((8,), ("data",))
 N, D = 8, 1024
@@ -53,9 +53,32 @@ for rate in (0.0, 0.3, 0.7, 1.0):
         got = np.asarray(jax.jit(view)(XS))
         want = np.asarray(p.alive_mask(step, N)).astype(np.float32)
         assert np.array_equal(got, want), (rate, step, got, want)
+        assert np.array_equal(
+            np.asarray(p.drop_mask(step, N)), want), (rate, step)
         if rate == 1.0:
             assert want.sum() == 1, want  # the one-survivor rule
-print("[ok] local_alive == alive_mask across steps x rates (one draw)")
+            key = jax.random.fold_in(jax.random.PRNGKey(p.seed), step)
+            surv = int(survivor_index(jax.random.uniform(key, (N,))))
+            assert want[surv] == 1.0, (step, surv, want)
+print("[ok] local_alive == alive_mask == drop_mask across steps x rates")
+
+# robust_mean tracks the plan's survivor set over a denser steps grid —
+# every step's aggregate equals the numpy mean over that step's live rows
+# (the same jit cache entry serves all steps: step enters via closure
+# rebuild here, so assert value-correctness only).
+p = FailurePlan(rate=0.5, seed=23)
+for step in range(8):
+
+    @functools.partial(compat.shard_map, mesh=mesh, in_specs=(P("data"),),
+                       out_specs=P(), check_vma=False)
+    def agg_s(xs, _step=step):
+        return robust_mean(xs.reshape(D), _step, ("data",), p)
+
+    got = np.asarray(jax.jit(agg_s)(XS))
+    alive = np.asarray(p.alive_mask(step, N))
+    want = np.asarray(XS)[alive].mean(axis=0)
+    np.testing.assert_allclose(got, want, atol=1e-5, err_msg=str(step))
+print("[ok] robust_mean == live-subset mean across an 8-step grid")
 
 
 # all-dead partial_mean is NaN by contract (0/0): an impossible state under

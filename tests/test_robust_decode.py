@@ -1,0 +1,387 @@
+"""Robust decode-policy properties (DESIGN.md §14), meshless.
+
+Covers the decode-reduction hook across every registered gather preset:
+policy parsing/normalization, the reduce_rows order statistics against a
+numpy reference, permutation invariance, the JACM86 containment/breakdown
+property, trim(0) == mean bit-for-bit, trim∘scatter_decode == flat trimmed
+decode bit-for-bit across word-aligned shard windows, the masked-mean
+bit-identity against a survivors-only reference, and the payload/cost
+invariance of decode policies.  Mesh execution + the adversarial matrix
+live in tests/distributed_checks/robust_decode_check.py.
+
+The fuzzing section degrades to plain seeds when hypothesis isn't
+installed (it is pinned in requirements-dev.txt, so CI fuzzes for real).
+"""
+import dataclasses
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import comm_cost, mse, rotation
+from repro.core import types as t
+from repro.core import wire
+from repro.core.wire import base as wire_base
+from repro.core.wire import robust
+from repro.configs.registry import COMPRESSION_PRESETS, robust_preset
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+N, D = 8, 5000
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.distributed
+def test_robust_decode_check():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "distributed_checks" /
+                             "robust_decode_check.py")],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, f"\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL ROBUST DECODE CHECKS PASSED" in res.stdout
+
+GATHER_PRESETS = sorted(
+    name for name in COMPRESSION_PRESETS
+    if wire.resolve(robust_preset(name, "mean", axes=("data",))).reduce
+    == "all_gather")
+PSUM_PRESETS = sorted(set(COMPRESSION_PRESETS) - set(GATHER_PRESETS))
+
+
+def _cfg(name, policy):
+    return robust_preset(name, policy, axes=("data",))
+
+
+def _xs(seed=1, n=N, d=D, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d),
+                             jnp.float32) * scale
+
+
+def _rows(codec, cfg, xs, key=KEY):
+    return jnp.stack([codec.pack(xs[i], key, i, cfg)
+                      for i in range(xs.shape[0])])
+
+
+# --------------------------------------------------------------------------- #
+# Policy parsing.
+# --------------------------------------------------------------------------- #
+
+def test_parse_normalizes_trim0_to_mean():
+    assert t.parse_decode_policy("trim(0)") == ("mean", 0)
+    assert t.parse_decode_policy("mean") == ("mean", 0)
+
+
+def test_parse_mean_trim0_is_not_mean():
+    # mean_trim(0) is the (min+max)/2 midpoint — a different estimator.
+    assert t.parse_decode_policy("mean_trim(0)") == ("mean_trim", 0)
+
+
+def test_parse_policies_and_rejects():
+    assert t.parse_decode_policy("trim(3)") == ("trim", 3)
+    assert t.parse_decode_policy("median") == ("median", 0)
+    # whitespace-tolerant by design (strip), everything else rejects.
+    assert t.parse_decode_policy(" trim(1) ") == ("trim", 1)
+    for bad in ("trim", "trim(-1)", "trim(1.5)", "avg", "meantrim(1)"):
+        with pytest.raises(ValueError):
+            t.parse_decode_policy(bad)
+
+
+def test_config_validates_policy_at_construction():
+    with pytest.raises(ValueError):
+        dataclasses.replace(COMPRESSION_PRESETS["binary_packed"],
+                            decode_policy="trimm(1)")
+
+
+def test_resolve_rejects_robust_policy_on_psum_codecs():
+    for name in PSUM_PRESETS:
+        with pytest.raises(ValueError, match="per-peer wire rows"):
+            wire.resolve(_cfg(name, "trim(1)"))
+        # the normalized-to-mean spelling stays allowed.
+        wire.resolve(_cfg(name, "trim(0)"))
+
+
+# --------------------------------------------------------------------------- #
+# reduce_rows against a numpy reference.
+# --------------------------------------------------------------------------- #
+
+def _np_reduce(stack, kind, f, keep=None):
+    stack = np.asarray(stack, np.float64)
+    if keep is not None:
+        stack = stack[np.asarray(keep) > 0]
+    s = np.sort(stack, axis=0)
+    m = s.shape[0]
+    if kind == "mean":
+        return stack.mean(0)
+    if kind == "trim":
+        return s[f:m - f].mean(0)
+    if kind == "median":
+        return 0.5 * (s[(m - 1) // 2] + s[m // 2])
+    return 0.5 * (s[f] + s[m - 1 - f])  # mean_trim
+
+
+@pytest.mark.parametrize("kind,f", [("mean", 0), ("trim", 1), ("trim", 2),
+                                    ("median", 0), ("mean_trim", 1),
+                                    ("mean_trim", 0)])
+@pytest.mark.parametrize("masked", [False, True])
+def test_reduce_rows_matches_numpy(kind, f, masked):
+    stack = _xs(seed=11, d=97)
+    keep = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32) if masked \
+        else None
+    got = np.asarray(robust.reduce_rows(stack, kind, f, keep))
+    want = _np_reduce(stack, kind, f, keep)
+    np.testing.assert_allclose(got, want, rtol=2e-6, atol=2e-6)
+
+
+def test_reduce_rows_permutation_invariant():
+    # sorting forgets peer order: order-statistic reductions are bit-exact
+    # under any permutation of the stacked rows (mask permuted alongside).
+    stack = _xs(seed=5, d=211)
+    keep = jnp.asarray([1, 0, 1, 1, 1, 1, 0, 1], jnp.float32)
+    perm = jnp.asarray([6, 2, 0, 7, 4, 1, 5, 3])
+    for kind, f in (("trim", 1), ("trim", 2), ("median", 0),
+                    ("mean_trim", 1)):
+        a = np.asarray(robust.reduce_rows(stack, kind, f, keep))
+        b = np.asarray(robust.reduce_rows(stack[perm], kind, f, keep[perm]))
+        assert (a == b).all(), (kind, f)
+
+
+def test_reduce_rows_undefined_is_nan():
+    stack = _xs(seed=7, d=13)
+    # over-trimmed: m = 2 kept ≤ 2f.
+    keep = jnp.asarray([1, 1, 0, 0, 0, 0, 0, 0], jnp.float32)
+    assert np.isnan(np.asarray(
+        robust.reduce_rows(stack, "trim", 1, keep))).all()
+    # all-dead: every policy NaNs (the partial_mean 0/0 contract).
+    dead = jnp.zeros((8,), jnp.float32)
+    for kind, f in (("mean", 0), ("trim", 1), ("median", 0),
+                    ("mean_trim", 1)):
+        assert np.isnan(np.asarray(
+            robust.reduce_rows(stack, kind, f, dead))).all(), kind
+
+
+# --------------------------------------------------------------------------- #
+# Breakdown / containment (the JACM86 f-of-n property).
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("kind", ["trim", "mean_trim"])
+@pytest.mark.parametrize("attack", [np.nan, np.inf, -np.inf, 1e30, -1e30])
+def test_containment_under_f_corrupt_rows(kind, attack):
+    # with c ≤ f corrupt rows and m > 2f kept, every post-trim value lies
+    # within the honest per-coordinate range — the estimate is contained
+    # in the honest convex hull no matter what the adversary sends.
+    f = 1
+    honest = np.asarray(_xs(seed=13, n=N - f, d=151), np.float64)
+    corrupt = np.full((f, 151), attack, np.float32)
+    stack = jnp.asarray(np.concatenate([honest, corrupt]), jnp.float32)
+    est = np.asarray(robust.reduce_rows(stack, kind, f))
+    lo, hi = honest.min(0), honest.max(0)
+    assert np.isfinite(est).all()
+    assert (est >= lo - 1e-5).all() and (est <= hi + 1e-5).all()
+
+
+def test_mean_has_breakdown_zero_but_trim_does_not():
+    stack = np.asarray(_xs(seed=17, d=64)).copy()
+    stack[0] = 1e30
+    est_mean = np.asarray(robust.reduce_rows(jnp.asarray(stack), "mean", 0))
+    est_trim = np.asarray(robust.reduce_rows(jnp.asarray(stack), "trim", 1))
+    assert np.abs(est_mean).max() > 1e27
+    assert np.abs(est_trim).max() < 1e3
+
+
+# --------------------------------------------------------------------------- #
+# Codec-level: the decode hook over real wire rows, every gather preset.
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("name", GATHER_PRESETS)
+def test_trim0_is_fused_mean_bit_for_bit(name):
+    cfg = _cfg(name, "trim(0)")
+    codec = wire.resolve(cfg)
+    xs = _xs()
+    rows = _rows(codec, cfg, xs)
+    got = codec.decode_rows_reduce(rows, KEY, cfg, D, N)
+    want = codec.decode_gathered(rows, KEY, cfg, D, N)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("name", GATHER_PRESETS)
+def test_robust_decode_finite_and_close(name):
+    # trim(1) over honest rows stays a sane estimator: finite everywhere
+    # and within a constant factor of the plain decode's error.
+    cfg = _cfg(name, "trim(1)")
+    codec = wire.resolve(cfg)
+    xs = _xs()
+    rows = _rows(codec, cfg, xs)
+    est = np.asarray(codec.decode_rows_reduce(rows, KEY, cfg, D, N))
+    assert est.shape == (D,) and np.isfinite(est).all()
+
+
+def _unwrap_rotated(codec):
+    c = codec
+    while isinstance(c, wire.EFCodec):
+        c = c.inner
+    if isinstance(c, wire.RotatedCodec):
+        return c.inner, True
+    return c, False
+
+
+@pytest.mark.parametrize("name", GATHER_PRESETS)
+@pytest.mark.parametrize("d", [D, 4999])  # word-aligned + non-divisible tail
+@pytest.mark.parametrize("nshards", [4, 3])
+def test_trim_scatter_equals_flat_bit_for_bit(name, d, nshards):
+    # the §12/§13 reduce-scatter decomposition composes with trimming:
+    # per-shard reductions over the word-aligned shard windows, concatenated
+    # in shard order (rotated codecs shard in ROTATED space at the padded
+    # length, one unrotate at the end — the gather_decode convention),
+    # reproduce the flat trimmed decode bit-for-bit.
+    cfg = _cfg(name, "trim(1)")
+    codec = wire.resolve(cfg)
+    xs = _xs(d=d)
+    rows = _rows(codec, cfg, xs)
+    flat = codec.decode_rows_reduce(rows, KEY, cfg, d, N)
+    shard_codec, rot = _unwrap_rotated(codec)
+    dsp = rotation.padded_dim(d) if rot else d
+    ds = wire_base.scatter_shard_len(dsp, nshards, shard_codec.scatter_align(cfg))
+    parts = [robust.reduce_rows(
+        codec.decode_rows_shard(rows, KEY, cfg, dsp, N, sh * ds, ds, nshards)
+        if not rot else
+        shard_codec.decode_rows_shard(rows, KEY, cfg, dsp, N, sh * ds, ds,
+                                      nshards),
+        "trim", 1) for sh in range(nshards)]
+    full = jnp.concatenate(parts)[:dsp]
+    if rot:
+        full = rotation.unrotate(rotation.rotation_key(KEY), full, d)
+    assert (np.asarray(full) == np.asarray(flat)).all()
+
+
+@pytest.mark.parametrize("name", GATHER_PRESETS)
+def test_masked_mean_bit_identical_to_survivor_rerun(name):
+    # excluding peers via drop_mask must equal re-running the decode with
+    # only the survivors' rows — with their ORIGINAL peer indices, so the
+    # seed-trick regeneration chains stay intact — bit for bit.  For
+    # rotated codecs "re-running" means the production order: survivor
+    # average in ROTATED space at the padded length, ONE unrotate.
+    cfg = _cfg(name, "mean")
+    codec = wire.resolve(cfg)
+    xs = _xs(seed=23)
+    rows = _rows(codec, cfg, xs)
+    drop = jnp.asarray([1, 1, 1, 0, 1, 1, 1, 1], jnp.float32)
+    got = np.asarray(codec.decode_rows_reduce(rows, KEY, cfg, D, N,
+                                              drop_mask=drop))
+    inner, rot = _unwrap_rotated(codec)
+    dim = rotation.padded_dim(D) if rot else D
+    stack = (inner if rot else codec).decode_rows(rows, KEY, cfg, dim, N)
+    acc = jnp.zeros((dim,), jnp.float32)
+    for i in range(N):
+        if float(drop[i]) > 0:
+            acc = acc + stack[i]
+    want = acc / float(drop.sum())
+    if rot:
+        want = rotation.unrotate(rotation.rotation_key(KEY), want, D)
+    assert (got == np.asarray(want)).all()
+
+
+def test_decode_policy_never_changes_the_payload():
+    # cost_config and the wire geometry are policy-blind: trimming happens
+    # after the gather, on the same rows.
+    for name in GATHER_PRESETS:
+        base_cfg = _cfg(name, "mean")
+        trim_cfg = _cfg(name, "trim(2)")
+        codec = wire.resolve(base_cfg)
+        assert codec is wire.resolve(trim_cfg)
+        assert (comm_cost.cost_config(base_cfg, n=N, d=D)
+                == comm_cost.cost_config(trim_cfg, n=N, d=D))
+        assert (codec.wire_slots(D, base_cfg)
+                == codec.wire_slots(D, trim_cfg))
+
+
+# --------------------------------------------------------------------------- #
+# mse_trimmed closed-form bounds.
+# --------------------------------------------------------------------------- #
+
+def test_mse_trimmed_f0_is_base_exactly():
+    xs = _xs(seed=29, d=128)
+    base = mse.mse_binary(xs)
+    assert float(mse.mse_trimmed(base, xs, 0)) == float(base)
+
+
+def test_mse_trimmed_rejects_overtrim():
+    xs = _xs(seed=29, n=4, d=16)
+    with pytest.raises(ValueError):
+        mse.mse_trimmed(1.0, xs, 2)
+
+
+@pytest.mark.parametrize("name,bound_fn", [
+    ("bernoulli_seed_1bit",
+     lambda xs, cfg, f: mse.mse_trimmed_bernoulli(
+         xs, float(cfg.encoder.fraction),
+         jnp.mean(xs, axis=-1), f)),
+    ("binary_packed", lambda xs, cfg, f: mse.mse_trimmed_binary(xs, f)),
+])
+def test_trimmed_decode_error_within_closed_form_bound(name, bound_fn):
+    # clean-regime empirical check of the §14 bound: the trim(1) decode's
+    # mean squared error over independent rounds stays below the closed
+    # form (which is deliberately loose — Cauchy–Schwarz over n terms).
+    f = 1
+    cfg = _cfg(name, f"trim({f})")
+    codec = wire.resolve(cfg)
+    xs = _xs(seed=31, d=512)
+    xbar = np.asarray(xs.mean(0))
+    bound = float(bound_fn(xs, cfg, f))
+    errs = []
+    for r in range(20):
+        key = jax.random.PRNGKey(100 + r)
+        rows = _rows(codec, cfg, xs, key)
+        est = np.asarray(codec.decode_rows_reduce(rows, key, cfg, 512, N))
+        errs.append(float(((est - xbar) ** 2).sum()))
+    assert np.mean(errs) <= bound
+
+
+# --------------------------------------------------------------------------- #
+# Hypothesis fuzzing (skips gracefully without the package).
+# --------------------------------------------------------------------------- #
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - CI always has hypothesis
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    SET = settings(max_examples=25, deadline=None)
+
+    @SET
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 12),
+           d=st.integers(1, 97), f=st.integers(0, 2),
+           kind=st.sampled_from(["trim", "median", "mean_trim"]))
+    def test_fuzz_reduce_rows_matches_numpy(seed, n, d, f, kind):
+        if n <= 2 * f:
+            return
+        stack = jax.random.normal(jax.random.PRNGKey(seed), (n, d),
+                                  jnp.float32) * 3.0
+        got = np.asarray(robust.reduce_rows(stack, kind, f))
+        want = _np_reduce(stack, kind, f)
+        np.testing.assert_allclose(got, want, rtol=3e-6, atol=3e-6)
+
+    @SET
+    @given(seed=st.integers(0, 2**31 - 1), f=st.integers(1, 2),
+           nbad=st.integers(0, 2), scale=st.floats(1e-3, 1e3))
+    def test_fuzz_containment(seed, f, nbad, scale):
+        if nbad > f:
+            return
+        n = 8
+        rng = np.random.default_rng(seed)
+        honest = rng.normal(size=(n - nbad, 31)) * scale
+        bad = rng.choice([np.nan, np.inf, -np.inf, 1e30])
+        stack = np.concatenate(
+            [honest, np.full((nbad, 31), bad)]).astype(np.float32)
+        est = np.asarray(robust.reduce_rows(jnp.asarray(stack), "trim", f))
+        lo, hi = honest.min(0), honest.max(0)
+        pad = 1e-4 * scale
+        assert (est >= lo - pad).all() and (est <= hi + pad).all()
